@@ -1,0 +1,54 @@
+"""Shared helpers for the benchmark harness (one module per paper table)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import corpus_blocks, corpus_files, plan_size
+from repro.core.lz4_types import Sequence
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "benchmarks")
+
+ENTRY_SWEEP = [64, 128, 256, 512, 1024, 2048, 4096, 8192]
+
+
+def bits(entries: int) -> int:
+    return int(entries).bit_length() - 1
+
+
+def corpus_subset(fast: bool = True) -> list[bytes]:
+    """Blocks used in ratio sweeps. fast=True uses a ~⅓ subset."""
+    blocks = corpus_blocks()
+    if fast:
+        return blocks[::3]
+    return blocks
+
+
+def corpus_ratio(compress_fn, blocks: list[bytes]) -> float:
+    """Paper's definition: avg original size / avg compressed size."""
+    orig = sum(len(b) for b in blocks)
+    comp = 0
+    for b in blocks:
+        comp += compress_fn(b)
+    return orig / comp
+
+
+def save_json(name: str, obj) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1)
+    return path
+
+
+def timed(fn, *args, repeat: int = 3, **kw):
+    fn(*args, **kw)  # warmup / jit
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    return out, min(ts)

@@ -1,0 +1,67 @@
+"""Paper Table IV: throughput.  FPGA clocks cannot be measured here; the
+cycle model (repro.core.cycle_model) reproduces the paper's throughput
+arithmetic on real corpus data:
+
+  * ours: 1 window/cycle deterministic -> PWS * f = 16.10 Gb/s @ 251.57 MHz,
+    INDEPENDENT of data content (the whole point of S1+S2);
+  * multi-match baseline: loses cycles to extra matches + unbounded extension
+    feedback trips -> reproduces the ~30-40% parallelism loss the paper
+    attributes to [10]/[11] (10->6.08, 6.4->4.5 Gb/s).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import compress_windowed_multi
+from repro.core.cycle_model import (
+    FREQ_BENES_MHZ,
+    FREQ_OURS_MHZ,
+    baseline_throughput,
+    ours_throughput,
+    peak_gbps,
+)
+
+from .common import bits, corpus_subset, save_json
+
+
+def run(fast: bool = True) -> dict:
+    blocks = corpus_subset(fast)
+    ours_bpc = []
+    base_bpc = []
+    for b in blocks:
+        ours_bpc.append(ours_throughput(len(b)).bytes_per_cycle)
+        res = compress_windowed_multi(b, hash_bits=bits(256))
+        base_bpc.append(baseline_throughput(res, len(b)).bytes_per_cycle)
+    ours_eff = float(np.mean(ours_bpc))
+    base_eff = float(np.mean(base_bpc))
+    out = {
+        "table": "IV",
+        "pws": 8,
+        "ours": {
+            "bytes_per_cycle": round(ours_eff, 3),
+            "freq_mhz": FREQ_OURS_MHZ,
+            "gbps": round(ours_eff * FREQ_OURS_MHZ * 8 / 1000, 2),
+            "deterministic": True,
+        },
+        "paper_ours_gbps": 16.10,
+        "baseline_multi_match": {
+            "bytes_per_cycle": round(base_eff, 3),
+            "freq_mhz": FREQ_BENES_MHZ,
+            "gbps": round(base_eff * FREQ_BENES_MHZ * 8 / 1000, 2),
+            "parallelism_loss_pct": round(100 * (1 - base_eff / 8.0), 1),
+        },
+        "paper_benes_gbps": 6.08,
+        "peak_gbps_at_ours_freq": round(peak_gbps(), 2),
+        "speedup_vs_baseline": round(
+            (ours_eff * FREQ_OURS_MHZ) / (base_eff * FREQ_BENES_MHZ), 3
+        ),
+        "paper_speedup": 2.648,
+    }
+    save_json("table4", out)
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,22 @@
+"""Core LZ4 compression library — the paper's contribution.
+
+Public API:
+    compress_greedy      — software baseline (GitHub-like, multi-match, unbounded)
+    compress_windowed    — the paper's single-match / bounded scheme (golden model)
+    compress_blocks_jax  — vectorized JAX engine of the combined scheme (jit)
+    encode_block / decode_block — exact LZ4 block format round trip
+"""
+from .lz4_types import (  # noqa: F401
+    DEFAULT_HASH_BITS,
+    DEFAULT_MAX_MATCH,
+    DEFAULT_PWS,
+    MAX_BLOCK,
+    Sequence,
+    plan_coverage,
+    plan_size,
+)
+from .reference import compress_greedy, compression_ratio  # noqa: F401
+from .schemes import compress_windowed, compress_windowed_multi  # noqa: F401
+from .encoder import encode_block  # noqa: F401
+from .decoder import decode_block, LZ4FormatError  # noqa: F401
+from .corpus import corpus_blocks, corpus_files  # noqa: F401

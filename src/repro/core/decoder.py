@@ -1,0 +1,63 @@
+"""Independent LZ4 block decoder, written against the public block-format spec.
+
+Used as the round-trip oracle: every compressor in this repo must produce
+blocks this decoder restores bit-exactly.  Deliberately shares no code with
+the encoder.
+"""
+from __future__ import annotations
+
+
+class LZ4FormatError(ValueError):
+    pass
+
+
+def decode_block(block: bytes, max_out: int | None = None) -> bytes:
+    out = bytearray()
+    i = 0
+    n = len(block)
+    while True:
+        if i >= n:
+            raise LZ4FormatError("truncated block: missing token")
+        token = block[i]
+        i += 1
+        lit_len = token >> 4
+        if lit_len == 15:
+            while True:
+                if i >= n:
+                    raise LZ4FormatError("truncated literal length")
+                b = block[i]
+                i += 1
+                lit_len += b
+                if b != 255:
+                    break
+        if i + lit_len > n:
+            raise LZ4FormatError("truncated literals")
+        out += block[i : i + lit_len]
+        i += lit_len
+        if i == n:
+            break  # final literals-only sequence
+        if i + 2 > n:
+            raise LZ4FormatError("truncated offset")
+        offset = block[i] | (block[i + 1] << 8)
+        i += 2
+        if offset == 0:
+            raise LZ4FormatError("zero offset")
+        if offset > len(out):
+            raise LZ4FormatError("offset beyond output")
+        match_len = (token & 0xF) + 4
+        if (token & 0xF) == 15:
+            while True:
+                if i >= n:
+                    raise LZ4FormatError("truncated match length")
+                b = block[i]
+                i += 1
+                match_len += b
+                if b != 255:
+                    break
+        # Byte-by-byte copy: overlapping matches (offset < match_len) replicate.
+        src = len(out) - offset
+        for j in range(match_len):
+            out.append(out[src + j])
+        if max_out is not None and len(out) > max_out:
+            raise LZ4FormatError("output exceeds limit")
+    return bytes(out)

@@ -1,0 +1,92 @@
+"""Deterministic, host-sharded token pipeline with LZ4-compressed shards.
+
+The synthetic stream mixes zipf-distributed tokens with repeated n-grams so
+the LZ4 stage achieves a real (>1) compression ratio — the shard files on
+disk go through the paper's engine and are decompressed on load.
+
+Restart-friendliness: batches are a pure function of (step, host_id), so a
+resumed job consumes exactly the batches it would have seen (exactly-once per
+epoch across hosts is asserted in tests).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core.decoder import decode_block
+from repro.core.jax_compressor import compress_bytes
+
+
+def synth_tokens(seed: int, n: int, vocab: int) -> np.ndarray:
+    """Zipf tokens with injected n-gram repeats (LZ4-compressible)."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, min(vocab, 4096) + 1)
+    probs = 1.0 / ranks**1.1
+    probs /= probs.sum()
+    toks = rng.choice(len(ranks), size=n, p=probs).astype(np.int32)
+    # repeat phrases: copy earlier spans forward
+    n_rep = n // 64
+    for _ in range(n_rep):
+        src = rng.integers(0, max(n - 64, 1))
+        dst = rng.integers(0, max(n - 32, 1))
+        ln = rng.integers(8, 32)
+        toks[dst : dst + ln] = toks[src : src + ln]
+    return toks % vocab
+
+
+class ShardedTokenPipeline:
+    """Writes LZ4'd token shards at init; serves deterministic (B,S) batches."""
+
+    def __init__(self, data_dir: str, vocab: int, *, n_shards: int = 4,
+                 shard_tokens: int = 65536 // 2, host_id: int = 0, n_hosts: int = 1,
+                 seed: int = 0):
+        self.vocab = vocab
+        self.host_id = host_id
+        self.n_hosts = n_hosts
+        self.data_dir = data_dir
+        os.makedirs(data_dir, exist_ok=True)
+        self.shards = []
+        for s in range(n_shards):
+            path = os.path.join(data_dir, f"shard_{s:04d}.lz4")
+            if not os.path.exists(path):
+                toks = synth_tokens(seed * 1000 + s, shard_tokens, vocab)
+                raw = toks.astype(np.int32).tobytes()
+                blocks = compress_bytes(raw)
+                with open(path, "wb") as f:
+                    f.write(len(blocks).to_bytes(4, "little"))
+                    for b in blocks:
+                        f.write(len(b).to_bytes(4, "little"))
+                        f.write(b)
+            self.shards.append(path)
+        self._cache: dict[int, np.ndarray] = {}
+
+    def _load_shard(self, s: int) -> np.ndarray:
+        if s not in self._cache:
+            with open(self.shards[s], "rb") as f:
+                nb = int.from_bytes(f.read(4), "little")
+                raw = bytearray()
+                for _ in range(nb):
+                    size = int.from_bytes(f.read(4), "little")
+                    raw += decode_block(f.read(size))
+            self._cache[s] = np.frombuffer(bytes(raw), np.int32)
+        return self._cache[s]
+
+    def batch(self, step: int, batch: int, seq: int) -> np.ndarray:
+        """Deterministic (batch, seq) int32 tokens for this host at `step`."""
+        out = np.empty((batch, seq), np.int32)
+        for i in range(batch):
+            gidx = (step * batch * self.n_hosts) + self.host_id * batch + i
+            shard = self._load_shard(gidx % len(self.shards))
+            n_per = len(shard) - seq
+            start = (gidx * 7919) % max(n_per, 1)
+            out[i] = shard[start : start + seq]
+        return out
+
+    def compression_ratio(self) -> float:
+        raw = comp = 0
+        for s, path in enumerate(self.shards):
+            arr = self._load_shard(s)
+            raw += arr.nbytes
+            comp += os.path.getsize(path)
+        return raw / comp

@@ -1,0 +1,67 @@
+"""Fault tolerance & straggler mitigation primitives.
+
+At fleet scale the failure domains are: host death (checkpoint/restart),
+slow hosts (straggler detection -> re-mesh request), and I/O stalls (async
+checkpointing).  This module provides the host-side policy pieces; the
+recovery path itself (restore + elastic reshard) lives in checkpoint.py and
+is exercised end-to-end by launch/train.py --simulate-failure and
+tests/test_system.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+@dataclasses.dataclass
+class StepMonitor:
+    """EMA step-time tracker; flags stragglers and emits re-mesh requests."""
+
+    ema_alpha: float = 0.1
+    straggler_factor: float = 3.0
+    warmup_steps: int = 5
+    ema: float | None = None
+    steps: int = 0
+    straggler_events: int = 0
+    _t0: float | None = None
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> dict:
+        dt = time.perf_counter() - self._t0
+        self.steps += 1
+        is_straggler = False
+        if self.steps > self.warmup_steps and self.ema is not None:
+            is_straggler = dt > self.straggler_factor * self.ema
+            if is_straggler:
+                self.straggler_events += 1
+        if self.ema is None:
+            self.ema = dt
+        elif not is_straggler:  # don't poison the EMA with outliers
+            self.ema = (1 - self.ema_alpha) * self.ema + self.ema_alpha * dt
+        return {"step_time": dt, "ema": self.ema, "straggler": is_straggler}
+
+    def should_remesh(self, threshold: int = 3) -> bool:
+        """Persistent stragglers -> ask the launcher for an elastic re-mesh."""
+        return self.straggler_events >= threshold
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    """Bounded-retry policy with exponential backoff."""
+
+    max_failures: int = 5
+    backoff_s: float = 1.0
+    failures: int = 0
+
+    def record_failure(self) -> float:
+        """Returns backoff seconds to sleep; raises if the budget is spent."""
+        self.failures += 1
+        if self.failures > self.max_failures:
+            raise RuntimeError(f"giving up after {self.failures - 1} failures")
+        return self.backoff_s * (2 ** (self.failures - 1))
+
+
+class SimulatedFailure(RuntimeError):
+    """Injected by --simulate-failure to exercise the recovery path."""

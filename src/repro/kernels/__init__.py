@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (hash + extended match).
+
+Layout per kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+dispatch wrappers), ref.py (pure-jnp oracles).  Validated with interpret=True
+on CPU; the TARGET is TPU v5e (see module docstrings for the Mosaic mapping).
+"""

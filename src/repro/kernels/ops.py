@@ -1,0 +1,66 @@
+"""jit'd wrappers around the Pallas kernels with pure-jnp fallback dispatch.
+
+`use_pallas` selects the Pallas path (interpret=True on CPU; on a real TPU the
+same call sites compile the Mosaic kernels).  The jnp fallback is the oracle
+in ref.py — both paths are interchangeable and tested for exact equality.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .fibhash import TILE as HASH_TILE
+from .fibhash import fibhash_pallas
+from .match_extend import TILE as EXT_TILE
+from .match_extend import match_extend_pallas
+
+
+def _pad_to(x, multiple, value=0):
+    P = x.shape[0]
+    rem = (-P) % multiple
+    if rem == 0:
+        return x
+    return jnp.concatenate([x, jnp.full((rem,), value, x.dtype)])
+
+
+@functools.partial(jax.jit, static_argnames=("hash_bits", "use_pallas"))
+def hash_positions(block_i32, hash_bits: int = 8, use_pallas: bool = False):
+    """Word + Fibonacci hash at every position of a (B,) int32 byte block.
+
+    The block must be padded with >= 3 trailing bytes; returns (words, hashes)
+    of length B-3 (one per position that has a full 4-byte word).
+    """
+    B = block_i32.shape[0]
+    P = B - 3
+    b0 = block_i32[:P]
+    b1 = block_i32[1 : P + 1]
+    b2 = block_i32[2 : P + 2]
+    b3 = block_i32[3 : P + 3]
+    if use_pallas:
+        b0p, b1p, b2p, b3p = (_pad_to(b, HASH_TILE) for b in (b0, b1, b2, b3))
+        w, h = fibhash_pallas(b0p, b1p, b2p, b3p, hash_bits=hash_bits)
+        return w[:P], h[:P]
+    return ref.fibhash_ref(b0, b1, b2, b3, hash_bits)
+
+
+@functools.partial(jax.jit, static_argnames=("max_match", "use_pallas"))
+def match_lengths(block_i32, cand, valid, n, max_match: int = 36, use_pallas: bool = False):
+    """Bounded match length per position (0 where ~valid, else in [4, max_match])."""
+    if use_pallas:
+        P = cand.shape[0]
+        candp = _pad_to(cand, EXT_TILE)
+        validp = _pad_to(valid.astype(jnp.bool_), EXT_TILE)
+        need = candp.shape[0] + max_match
+        blk = block_i32
+        if blk.shape[0] < need:
+            blk = jnp.concatenate(
+                [blk, jnp.zeros((need - blk.shape[0],), blk.dtype)]
+            )
+        out = match_extend_pallas(
+            blk, candp, validp, jnp.asarray([n], jnp.int32), max_match=max_match
+        )
+        return out[:P]
+    return ref.match_extend_ref(block_i32, cand, valid, n, max_match)

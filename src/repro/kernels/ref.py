@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness references)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.lz4_types import HASH_PRIME, MIN_MATCH, LAST_LITERALS
+
+
+def fibhash_ref(b0, b1, b2, b3, hash_bits: int):
+    """Fibonacci hash of the little-endian 4-byte word at each position.
+
+    b0..b3 are the byte streams shifted by 0..3 positions (int32 in [0,255]).
+    Returns (word_u32_as_i32, hash) — hash in [0, 2^hash_bits).
+    """
+    w = (
+        b0.astype(jnp.uint32)
+        | (b1.astype(jnp.uint32) << 8)
+        | (b2.astype(jnp.uint32) << 16)
+        | (b3.astype(jnp.uint32) << 24)
+    )
+    h = (w * jnp.uint32(HASH_PRIME)) >> jnp.uint32(32 - hash_bits)
+    return w.astype(jnp.int32), h.astype(jnp.int32)
+
+
+def match_extend_ref(block, cand, valid, n, max_match: int):
+    """Bounded extended-match length (the paper's feedforward S2 datapath).
+
+    block : (B,) int32 byte values (padded past `n` arbitrarily)
+    cand  : (P,) int32 candidate position for each position p (garbage if ~valid)
+    valid : (P,) bool  4-byte match already confirmed at p
+    n     : scalar int32, true block length
+    max_match : static python int, the match-length cap (paper: 36)
+
+    Returns (P,) int32 full match length (>= 4 where valid, 0 elsewhere),
+    capped at max_match and at the end-of-block rule (match end <= n-5).
+    """
+    P = cand.shape[0]
+    p = jnp.arange(P, dtype=jnp.int32)
+    max_extra = jnp.clip(n - LAST_LITERALS - (p + MIN_MATCH), 0, max_match - MIN_MATCH)
+    prefix = jnp.ones(P, dtype=bool)
+    length = jnp.zeros(P, dtype=jnp.int32)
+    for j in range(max_match - MIN_MATCH):
+        cur = block[jnp.clip(p + MIN_MATCH + j, 0, block.shape[0] - 1)]
+        cnd = block[jnp.clip(cand + MIN_MATCH + j, 0, block.shape[0] - 1)]
+        prefix = prefix & (cur == cnd) & (j < max_extra)
+        length = length + prefix.astype(jnp.int32)
+    return jnp.where(valid, MIN_MATCH + length, 0)

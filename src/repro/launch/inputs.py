@@ -1,0 +1,56 @@
+"""Batch construction: ShapeDtypeStruct stand-ins (dry-run) and real arrays (tests).
+
+Modality frontends are STUBS per the assignment: `input_specs` provides
+precomputed frame embeddings (whisper) / patch embeddings (internvl2) next to
+the token stream.  For the VLM the vision tokens occupy the first
+`vision_tokens` positions of the sequence, so tokens shrink accordingly and
+the total backbone length equals the assigned seq_len.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def batch_dims(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    text_len = shape.seq_len - (cfg.vision_tokens or 0)
+    return {"batch": shape.global_batch, "seq": text_len}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStructs for every model input of this (arch, shape) cell."""
+    B = shape.global_batch
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if shape.mode == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B,), jnp.int32)}
+    d = batch_dims(cfg, shape)
+    specs = {"tokens": jax.ShapeDtypeStruct((B, d["seq"]), jnp.int32)}
+    if cfg.family == "encdec":
+        specs["enc_embeds"] = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model), cdt)
+    if cfg.family == "vlm":
+        specs["vision_embeds"] = jax.ShapeDtypeStruct((B, cfg.vision_tokens, cfg.d_model), cdt)
+    return specs
+
+
+def make_batch(seed: int, cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Real (small) batch for tests/examples."""
+    rng = np.random.default_rng(seed)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    text_len = seq - (cfg.vision_tokens or 0)
+    out = {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, text_len)), jnp.int32
+        )
+    }
+    if cfg.family == "encdec":
+        out["enc_embeds"] = jnp.asarray(
+            rng.normal(0, 1, (batch, cfg.enc_seq, cfg.d_model)), cdt
+        )
+    if cfg.family == "vlm":
+        out["vision_embeds"] = jnp.asarray(
+            rng.normal(0, 1, (batch, cfg.vision_tokens, cfg.d_model)), cdt
+        )
+    return out

@@ -1,0 +1,80 @@
+"""Regenerate the EXPERIMENTS.md data tables from experiment JSONs.
+
+  python -m repro.launch.report [--section dryrun|roofline|bench]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs.base import LONG_CONTEXT_ARCHS, all_arch_names
+
+EXP = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments")
+
+
+def dryrun_table() -> str:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(EXP, "dryrun", "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        coll = r.get("collectives", {})
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r.get('compile_s', 0):.1f} | "
+            f"{r.get('param_bytes', 0)/1e9:.2f} | "
+            f"{r.get('memory', {}).get('temp_size_in_bytes', 0)/1e9:.2f} | "
+            f"{sum(v['count'] for v in coll.values())} | "
+            f"{sum(v['bytes'] for v in coll.values())/1e9:.2f} |"
+        )
+    head = (
+        "| arch | shape | mesh | compile (s) | params (GB, global) | "
+        "XLA temp/dev (GB) | #coll ops | coll bytes/dev (GB, sans-scan) |\n"
+        "|---|---|---|---|---|---|---|---|"
+    )
+    return head + "\n" + "\n".join(rows)
+
+
+def skipped_cells() -> str:
+    out = []
+    for arch in all_arch_names():
+        if arch not in LONG_CONTEXT_ARCHS:
+            out.append(f"  * {arch} × long_500k — pure full-attention arch (see DESIGN.md)")
+    return "\n".join(out)
+
+
+def roofline_table() -> str:
+    from repro.launch.roofline import load_all, markdown_table
+
+    return markdown_table(load_all())
+
+
+def bench_summary() -> str:
+    out = []
+    for name in ("table1", "table2", "table3", "table4", "jax_throughput"):
+        p = os.path.join(EXP, "benchmarks", f"{name}.json")
+        if os.path.exists(p):
+            with open(p) as f:
+                out.append(f"### {name}\n```json\n{json.dumps(json.load(f), indent=1)}\n```")
+    return "\n\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all")
+    args = ap.parse_args(argv)
+    if args.section in ("dryrun", "all"):
+        print("## Dry-run cells\n")
+        print(dryrun_table())
+        print("\nSkipped (documented):\n" + skipped_cells())
+    if args.section in ("roofline", "all"):
+        print("\n## Roofline\n")
+        print(roofline_table())
+    if args.section in ("bench", "all"):
+        print("\n## Benchmarks\n")
+        print(bench_summary())
+
+
+if __name__ == "__main__":
+    main()

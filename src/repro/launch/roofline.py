@@ -1,0 +1,224 @@
+"""Roofline analysis over the dry-run JSONs (offline post-processing; no jax).
+
+Per (arch x shape) single-pod cell:
+    compute   = HLO_FLOPs_per_dev / peak_FLOPs          [s]
+    memory    = HLO_bytes_per_dev / HBM_bw              [s]
+    collective= collective_bytes_per_dev / link_bw      [s]
+(The dry-run HLO is the post-SPMD per-device program, so per-device numbers
+divided by per-chip rates equal the global formula totals/(chips x rate).)
+
+MODEL_FLOPS (useful work): 6*N*D for training, 2*N*D for prefill/decode
+(forward only), with N = non-embedding params (+ d*V logits matmul) and
+N_active for MoE.  The ratio MODEL_FLOPS/HLO_FLOPs exposes remat and padding
+waste.
+
+Usage: python -m repro.launch.roofline [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs.base import SHAPES, LONG_CONTEXT_ARCHS, all_arch_names, get_config
+
+PEAK_FLOPS = 197e12   # TPU v5e bf16 per chip
+HBM_BW = 819e9        # B/s per chip
+LINK_BW = 50e9        # B/s per ICI link
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+def layer_param_count(spec, cfg) -> tuple[float, float]:
+    """(total, active) params of one layer."""
+    d, f, hd = cfg.d_model, cfg.d_ff, cfg.hd
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    if spec.kind in ("attn", "moe"):
+        attn = d * nq * hd * 2 + d * nkv * hd * 2
+        if spec.cross_attn:
+            attn *= 2
+        if spec.kind == "moe":
+            total = attn + d * cfg.n_experts + cfg.n_experts * 3 * d * f
+            active = attn + d * cfg.n_experts + cfg.top_k * 3 * d * f
+            return total, active
+        mlp = (3 if not cfg.layer_norm else 2) * d * f if (spec.has_mlp and f) else 0
+        n = attn + mlp
+        return n, n
+    if spec.kind == "rglru":
+        r = cfg.lru_width or d
+        n = 2 * d * r + 2 * r * r + r * d + (3 * d * f if f else 0)
+        return n, n
+    if spec.kind == "mlstm":
+        di = cfg.d_inner or 2 * d
+        n = 2 * d * di + 3 * di * di + di * 2 * cfg.n_heads + di * d
+        return n, n
+    if spec.kind == "slstm":
+        n = 4 * d * d + 4 * d * (d // cfg.n_heads) + 3 * d * (4 * d // 3)
+        return n, n
+    raise ValueError(spec.kind)
+
+
+def model_param_count(cfg) -> tuple[float, float]:
+    """(N_total, N_active) excluding the embedding gather, including logits."""
+    total = active = cfg.d_model * cfg.vocab_size  # logits matmul
+    for seg in cfg.segments:
+        for spec in seg.unit:
+            t, a = layer_param_count(spec, cfg)
+            total += t * seg.repeats
+            active += a * seg.repeats
+    if cfg.family == "encdec":
+        t, _ = layer_param_count(
+            type(cfg.segments[0].unit[0])(kind="attn", attn_type="bidir"), cfg
+        )
+        total += t * cfg.n_enc_layers
+        active += t * cfg.n_enc_layers
+    return total, active
+
+
+def model_flops(cfg, shape, chips: int) -> float:
+    """Useful FLOPs per step per device."""
+    _, n_active = model_param_count(cfg)
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 6.0
+    elif shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 2.0
+    else:
+        tokens = shape.global_batch
+        mult = 2.0
+    return mult * n_active * tokens / chips
+
+
+def analyze_cell(rec: dict) -> dict | None:
+    if "probe" not in rec:
+        return None
+    if rec["arch"] == "lz4-engine":  # the engine cell reports Gb/s, not 6ND
+        tot = rec["probe"]["total"]
+        bound = max(tot["flops"] / PEAK_FLOPS, tot["bytes"] / HBM_BW,
+                    tot["coll_bytes"] / LINK_BW)
+        return {
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "compute_s": tot["flops"] / PEAK_FLOPS,
+            "memory_s": tot["bytes"] / HBM_BW,
+            "memory_fused_s": tot["bytes"] / HBM_BW,
+            "collective_s": tot["coll_bytes"] / LINK_BW,
+            "dominant": "memory",
+            "model_flops_per_dev": 0.0, "hlo_flops_per_dev": tot["flops"],
+            "useful_flops_ratio": 0.0, "roofline_fraction": 0.0,
+            "roofline_fraction_fused": 0.0,
+            "gbps_per_chip": rec["bytes_per_step"] / rec["chips"] / bound * 8 / 1e9
+            if bound else 0.0,
+            "coll_by_op": rec["probe"].get("coll_by_op", {}),
+        }
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    tot = rec["probe"]["total"]
+    compute = tot["flops"] / PEAK_FLOPS
+    memory = tot["bytes"] / HBM_BW
+    memory_fused = (tot.get("dot_bytes", 0.0) + tot["coll_bytes"]) / HBM_BW
+    coll = tot["coll_bytes"] / LINK_BW
+    dominant = max(("compute", compute), ("memory", memory), ("collective", coll),
+                   key=lambda t: t[1])
+    mf = model_flops(cfg, shape, rec["chips"])
+    useful = mf / max(tot["flops"], 1.0)
+    bound_time = max(compute, memory, coll)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute, "memory_s": memory, "collective_s": coll,
+        "dominant": dominant[0],
+        "model_flops_per_dev": mf,
+        "hlo_flops_per_dev": tot["flops"],
+        "useful_flops_ratio": useful,
+        # fraction of roofline-best: time if only the compute term existed on
+        # USEFUL flops, over the actual bounding term
+        "roofline_fraction": (mf / PEAK_FLOPS) / bound_time if bound_time else 0.0,
+        "roofline_fraction_fused": (
+            (mf / PEAK_FLOPS) / max(compute, memory_fused, coll)
+            if max(compute, memory_fused, coll) else 0.0
+        ),
+        "memory_fused_s": memory_fused,
+        "coll_by_op": rec["probe"].get("coll_by_op", {}),
+    }
+
+
+def suggest(row: dict) -> str:
+    if row["dominant"] == "collective":
+        return "reshard/overlap: biggest collective is " + (
+            max(row["coll_by_op"], key=row["coll_by_op"].get) if row["coll_by_op"] else "?"
+        )
+    if row["dominant"] == "memory":
+        return "cut bytes: remat policy / bf16 master / fused attention"
+    if row["useful_flops_ratio"] < 0.5:
+        return "compute-bound but wasteful: cut remat/padded-head/masked-attn waste"
+    return "compute-bound: near roofline, overlap remaining collectives"
+
+
+def load_all(optimized: bool = False) -> list[dict]:
+    suffix = "*__single_opt.json" if optimized else "*__single.json"
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, suffix))):
+        with open(path) as f:
+            rec = json.load(f)
+        row = analyze_cell(rec)
+        if row:
+            row["optimized"] = optimized
+            rows.append(row)
+    return rows
+
+
+def merged_table() -> str:
+    base = {(r["arch"], r["shape"]): r for r in load_all(False)}
+    opt = {(r["arch"], r["shape"]): r for r in load_all(True)}
+    lines = [
+        "| arch | shape | dominant | useful/HLO base→opt | roofline frac base→opt | fused frac base→opt |",
+        "|---|---|---|---|---|---|",
+    ]
+    for key in sorted(base):
+        b = base[key]
+        o = opt.get(key)
+        fmt = lambda r, f: f"{r[f]:.3f}" if r else "—"
+        lines.append(
+            f"| {key[0]} | {key[1]} | {b['dominant']} | "
+            f"{b['useful_flops_ratio']:.2f}→{fmt(o,'useful_flops_ratio') if o else '—'} | "
+            f"{b['roofline_fraction']:.3f}→{fmt(o,'roofline_fraction') if o else '—'} | "
+            f"{b.get('roofline_fraction_fused',0):.3f}→{fmt(o,'roofline_fraction_fused') if o else '—'} |"
+        )
+    return "\n".join(lines)
+
+
+def markdown_table(rows: list[dict]) -> str:
+    lines = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | dominant | useful/HLO | roofline frac | next move |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.2f} | "
+            f"{r['memory_s']*1e3:.2f} | {r['collective_s']*1e3:.2f} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | {suggest(r)} |"
+        )
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args(argv)
+    rows = load_all()
+    out = os.path.join(DRYRUN_DIR, "..", "roofline.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    if args.markdown:
+        print(markdown_table(rows))
+    else:
+        for r in rows:
+            print(f"{r['arch']:>18} {r['shape']:>12} dom={r['dominant']:>10} "
+                  f"frac={r['roofline_fraction']:.3f} useful={r['useful_flops_ratio']:.2f}")
+    print(f"\n[{len(rows)} cells] -> {os.path.abspath(out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,228 @@
+"""Step functions (train / prefill / decode) with full sharding annotations.
+
+Used both by the real drivers (train.py, serve.py) and by the dry-run, which
+lowers these exact functions against ShapeDtypeStruct inputs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import P
+from jax.sharding import NamedSharding
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import batch_axes, get_mesh, param_specs
+from repro.models import lm
+from repro.optim import adamw
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig, grad_compressor=None):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(lm.train_loss)(params, batch, cfg)
+        if grad_compressor is not None:
+            grads = grad_compressor(grads)
+        params, opt_state, metrics = adamw.update(grads, opt_state, params, opt_cfg)
+        metrics = {"loss": loss, **metrics}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int):
+    def prefill_step(params, batch):
+        return lm.prefill(params, batch, cfg, cache_len)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, cache, tokens):
+        return lm.decode_step(params, cache, tokens, cache["pos"], cfg)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding spec trees
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, mesh=None) -> dict:
+    ba = batch_axes(mesh or get_mesh(), cfg.pure_dp)
+    return {
+        "tokens": P(ba, None),
+        "enc_embeds": P(ba, None, None),
+        "vision_embeds": P(ba, None, None),
+    }
+
+
+def _decode_batchable(global_batch: int, mesh) -> bool:
+    import numpy as np
+
+    ba = batch_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in ba])) or 1
+    return global_batch % n == 0
+
+
+def cache_specs(cache_shapes, cfg: ModelConfig, shape: ShapeConfig, mesh=None):
+    """PartitionSpec tree for the decode cache.
+
+    Sequence axes of KV caches shard on "model" (decode_32k) or
+    ("data","model") (long_500k, batch=1) — SP for the cache, flash-decode
+    combine inserted by SPMD.  Batch shards on DP axes when divisible.
+    """
+    mesh = mesh or get_mesh()
+    ba = batch_axes(mesh) if _decode_batchable(shape.global_batch, mesh) else ()
+    seq_ax = ("data", "model") if shape.global_batch == 1 else "model"
+
+    def leaf(path: str, x):
+        nd = len(x.shape)
+        if nd == 0:
+            return P()
+        if path.endswith("pos") and nd <= 2:  # slot position arrays
+            return P(*((None,) * (nd - 1) + (seq_ax,)))
+        if path.endswith(("/k", "/v", "cross_k", "cross_v")):
+            # (repeats, B, S, kv, hd)
+            return P(None, ba, seq_ax, None, None)
+        if path.endswith("enc_memory") and nd == 3:
+            return P(ba, None, None)
+        if nd >= 2:  # recurrent states (repeats, B, ...)
+            return P(*((None, ba) + (None,) * (nd - 2)))
+        return P(*((None,) * nd))
+
+    def walk(tree, path):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{path}/{k}") for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(walk(v, f"{path}/{i}") for i, v in enumerate(tree))
+        if tree is None:
+            return None
+        return leaf(path, tree)
+
+    return walk(cache_shapes, "")
+
+
+def sanitize_spec(spec: P, shape: tuple, mesh) -> P:
+    """Drop sharded axes that do not divide the dim evenly (argument shardings
+    must tile exactly; GSPMD padding only applies to intermediates)."""
+    out = []
+    for i, el in enumerate(spec):
+        if el is None:
+            out.append(None)
+            continue
+        axes = el if isinstance(el, tuple) else (el,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        out.append(el if shape[i] % n == 0 else None)
+    return P(*out)
+
+
+def with_shardings(shape_tree, spec_tree, mesh=None):
+    """Attach NamedShardings to a ShapeDtypeStruct tree (for AOT lowering)."""
+    mesh = mesh or get_mesh()
+
+    def leaf(x, s):
+        if x is None:
+            return None
+        s = sanitize_spec(s, x.shape, mesh)
+        return jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=NamedSharding(mesh, s))
+
+    return jax.tree.map(leaf, shape_tree, spec_tree,
+                        is_leaf=lambda x: x is None or isinstance(x, jax.ShapeDtypeStruct))
+
+
+def train_state_structs(cfg: ModelConfig, shape: ShapeConfig, mesh=None):
+    """ShapeDtypeStructs (with shardings) for params, opt state and batch."""
+    from repro.launch.inputs import input_specs
+
+    mesh = mesh or get_mesh()
+    params_s = jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    p_specs = param_specs(params_s, cfg.fsdp, mesh, cfg.pure_dp)
+    params_sh = with_shardings(params_s, p_specs, mesh)
+    opt_s = jax.eval_shape(adamw.init, params_s)
+    o_specs = {"m": p_specs, "v": p_specs, "step": P()}
+    opt_sh = with_shardings(opt_s, o_specs, mesh)
+    raw_batch = input_specs(cfg, shape)
+    b_specs = {k: v for k, v in batch_specs(cfg, mesh).items() if k in raw_batch}
+    batch_sh = with_shardings(raw_batch, b_specs, mesh)
+    return params_sh, opt_sh, batch_sh
+
+
+def optimized_config(cfg: ModelConfig, shape: ShapeConfig, mesh=None) -> ModelConfig:
+    """Beyond-paper optimized posture (see EXPERIMENTS.md §Perf):
+      * dots-saveable remat (useful-FLOPs ratio 0.69 -> 0.8+)
+      * pure DP for small models in train/prefill (TP activation psums
+        dominate below ~3B params on a 16-wide model axis)
+      * decode: pin attention intermediates to the KV-cache sharding
+        (flash-decode; kills the involuntary cache rematerialization)
+        + masked cache writes
+    """
+    import dataclasses
+
+    import numpy as np
+
+    mesh = mesh or get_mesh()
+    params_s = jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params_s))
+    kw: dict = {"remat_policy": "dots"}
+    # pure DP requires the global batch to occupy every device; prefill_32k
+    # (batch 32 < 256 chips) must keep TP or most of the mesh idles — this
+    # rule was added after measuring a 4x regression (EXPERIMENTS.md §Perf).
+    if (
+        shape.mode in ("train", "prefill")
+        and n_params < 3e9
+        and shape.global_batch % mesh.size == 0
+    ):
+        kw["pure_dp"] = True
+        kw["fsdp"] = True
+    if shape.mode == "decode":
+        kw["decode_cache_axes"] = (
+            ("data", "model") if shape.global_batch == 1 else ("model",)
+        )
+        kw["cache_update"] = "masked"
+    return dataclasses.replace(cfg, **kw)
+
+
+def serving_config(cfg: ModelConfig, mesh=None) -> ModelConfig:
+    """Serving posture: bf16 params; FSDP only when TP-only does not fit HBM.
+
+    Training ZeRO-shards everything; a serving replica keeps weights TP-sharded
+    and resident (no per-token all-gather) unless the model exceeds per-chip
+    HBM with TP alone (mixtral-8x22b).
+    """
+    import dataclasses
+
+    import numpy as np
+
+    mesh = mesh or get_mesh()
+    params_s = jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params_s))
+    tp = mesh.shape["model"]
+    serve_fsdp = cfg.fsdp and (2 * n_params / tp > 8e9)  # bf16, >8GB/chip
+    return dataclasses.replace(cfg, param_dtype="bfloat16", fsdp=serve_fsdp)
+
+
+def decode_state_structs(cfg: ModelConfig, shape: ShapeConfig, mesh=None):
+    """ShapeDtypeStructs for (params, cache, tokens) of a decode cell.
+
+    NOTE: pass a serving_config(cfg) here (bf16 params, serving FSDP rule).
+    """
+    mesh = mesh or get_mesh()
+    params_s = jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    p_specs = param_specs(params_s, cfg.fsdp, mesh)
+    params_sh = with_shardings(params_s, p_specs, mesh)
+    B = shape.global_batch
+    cache_s = jax.eval_shape(
+        functools.partial(lm.init_cache, cfg, B, shape.seq_len)
+    )
+    c_specs = cache_specs(cache_s, cfg, shape, mesh)
+    cache_sh = with_shardings(cache_s, c_specs, mesh)
+    ba = batch_axes(mesh) if _decode_batchable(B, mesh) else ()
+    tokens_sh = jax.ShapeDtypeStruct((B,), jnp.int32, sharding=NamedSharding(mesh, P(ba)))
+    return params_sh, cache_sh, tokens_sh

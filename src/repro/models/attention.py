@@ -1,0 +1,272 @@
+"""GQA attention: chunked (train/prefill), cached single-token (decode).
+
+Memory strategy: python-loop over query chunks with *exact* static KV slices
+(causal: [0:(i+1)C], local: a window+chunk wide band) — no masked-out compute
+beyond intra-chunk triangles, each chunk wrapped in jax.checkpoint.  KV heads
+are broadcast to the query heads (GQA repeat) so the only sharded head axis is
+n_q, which GSPMD pads when n_heads % TP != 0 (whisper 12, minicpm 36).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_norm, linear_init, rope, softcap
+
+Q_CHUNK = 512
+
+
+def attention_init(key, cfg, d_kv_src=None, dtype=jnp.float32):
+    d = cfg.d_model
+    hd = cfg.hd
+    d_kv_src = d_kv_src or d
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": linear_init(ks[0], d, cfg.n_heads * hd, cfg.use_bias, dtype),
+        "wk": linear_init(ks[1], d_kv_src, cfg.n_kv_heads * hd, cfg.use_bias, dtype),
+        "wv": linear_init(ks[2], d_kv_src, cfg.n_kv_heads * hd, cfg.use_bias, dtype),
+        "wo": linear_init(ks[3], cfg.n_heads * hd, d, cfg.use_bias, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((hd,), dtype)}
+        p["k_norm"] = {"scale": jnp.ones((hd,), dtype)}
+    return p
+
+
+def _project_qkv(p, x, kv_src, cfg, q_positions, kv_positions):
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = (x @ p["wq"]["w"].astype(x.dtype)).reshape(B, S, cfg.n_heads, hd)
+    k = (kv_src @ p["wk"]["w"].astype(x.dtype)).reshape(
+        B, kv_src.shape[1], cfg.n_kv_heads, hd
+    )
+    v = (kv_src @ p["wv"]["w"].astype(x.dtype)).reshape(
+        B, kv_src.shape[1], cfg.n_kv_heads, hd
+    )
+    if cfg.use_bias:
+        q = q + p["wq"]["b"].reshape(cfg.n_heads, hd).astype(x.dtype)
+        k = k + p["wk"]["b"].reshape(cfg.n_kv_heads, hd).astype(x.dtype)
+        v = v + p["wv"]["b"].reshape(cfg.n_kv_heads, hd).astype(x.dtype)
+    if cfg.qk_norm:
+        q = apply_norm(p["q_norm"], q, cfg.norm_eps, False)
+        k = apply_norm(p["k_norm"], k, cfg.norm_eps, False)
+    if cfg.pos_type == "rope" and q_positions is not None:
+        q = rope(q, q_positions, cfg.rope_theta)
+        k = rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg):
+    """q: (B,Sq,H,hd), k/v: (B,Sk,H,hd); mask: (Sq,Sk) bool or None."""
+    scale = cfg.hd ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    scores = softcap(scores, cfg.attn_softcap)
+    if mask is not None:
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _repeat_kv(k, n_heads):
+    g = n_heads // k.shape[2]
+    return jnp.repeat(k, g, axis=2) if g > 1 else k
+
+
+def multihead_attention(
+    p,
+    x,
+    cfg,
+    attn_type: str = "global",
+    memory=None,
+    positions=None,
+):
+    """Training/prefill attention. Returns (out, (k, v)) for cache fill.
+
+    attn_type: "global" (causal), "local" (causal sliding window), "bidir".
+    memory: (B, S_mem, d) for cross attention (bidir over memory).
+    """
+    B, S, d = x.shape
+    kv_src = memory if memory is not None else x
+    S_kv = kv_src.shape[1]
+    q_pos = positions if positions is not None else jnp.arange(S)[None, :]
+    kv_pos = None if memory is not None else q_pos
+    q, k, v = _project_qkv(p, x, kv_src, cfg, q_pos if memory is None else q_pos, kv_pos)
+    kf = _repeat_kv(k, cfg.n_heads)
+    vf = _repeat_kv(v, cfg.n_heads)
+
+    if memory is not None or attn_type == "bidir":
+        if S <= Q_CHUNK * 2 and S_kv <= 4096:
+            out = _sdpa(q, kf, vf, None, cfg)
+        else:
+            outs = []
+            for i in range(0, S, Q_CHUNK):
+                qc = q[:, i : i + Q_CHUNK]
+                outs.append(jax.checkpoint(_sdpa, static_argnums=(4,))(qc, kf, vf, None, cfg))
+            out = jnp.concatenate(outs, axis=1)
+    else:
+        out = _causal_chunked(q, kf, vf, cfg, local=(attn_type == "local"))
+
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+    y = out @ p["wo"]["w"].astype(x.dtype)
+    if cfg.use_bias:
+        y = y + p["wo"]["b"].astype(x.dtype)
+    return y, (k, v)
+
+
+def _causal_chunked(q, k, v, cfg, local: bool):
+    """Causal (optionally sliding-window) attention with exact KV slices."""
+    B, S, H, hd = q.shape
+    C = min(Q_CHUNK, S)
+    assert S % C == 0, (S, C)
+    window = cfg.window
+    pos = jnp.arange(S)
+
+    def chunk_attn(qc, kc, vc, q0, k0, kw):
+        qp = q0 + jnp.arange(qc.shape[1])
+        kp = k0 + jnp.arange(kw)
+        mask = kp[None, :] <= qp[:, None]
+        if local:
+            mask &= kp[None, :] > qp[:, None] - window
+        return _sdpa(qc, kc, vc, mask, cfg)
+
+    outs = []
+    for i in range(0, S, C):
+        if local:
+            k0 = max(0, i + C - (window + C))
+            kw = i + C - k0
+        else:
+            k0 = 0
+            kw = i + C
+        qc = q[:, i : i + C]
+        kc = k[:, k0 : k0 + kw]
+        vc = v[:, k0 : k0 + kw]
+        outs.append(
+            jax.checkpoint(chunk_attn, static_argnums=(3, 4, 5))(qc, kc, vc, i, k0, kw)
+        )
+    return jnp.concatenate(outs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Decode path: single new token against a KV cache.
+# ---------------------------------------------------------------------------
+
+def make_cache(cfg, attn_type: str, batch: int, cache_len: int, dtype):
+    """Cache for one attention layer."""
+    size = min(cfg.window, cache_len) if attn_type == "local" else cache_len
+    return {
+        "k": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.hd), dtype),
+        "pos": jnp.full((size,), -1, jnp.int32),  # absolute position per slot
+    }
+
+
+def fill_cache(cache, k, v, start: int = 0):
+    """Prefill: write S tokens (positions start..start+S) into the cache."""
+    S = k.shape[1]
+    size = cache["k"].shape[1]
+    if size >= S:
+        cache = dict(cache)
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, start, axis=1)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, start, axis=1)
+        cache["pos"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], jnp.arange(start, start + S, dtype=jnp.int32), start, axis=0
+        )
+        return cache
+    # rolling (local) cache: keep the last `size` tokens
+    cache = dict(cache)
+    tail_pos = jnp.arange(S - size, S, dtype=jnp.int32) + start
+    slots = tail_pos % size
+    cache["k"] = cache["k"].at[:, slots].set(k[:, -size:])
+    cache["v"] = cache["v"].at[:, slots].set(v[:, -size:])
+    cache["pos"] = cache["pos"].at[slots].set(tail_pos)
+    return cache
+
+
+def decode_attention(p, x, cfg, cache, pos, attn_type: str = "global", memory_cache=None):
+    """x: (B,1,d); pos: scalar int32 — absolute position of the new token.
+
+    Returns (out (B,1,d), updated cache).
+    """
+    B = x.shape[0]
+    hd = cfg.hd
+    q = (x @ p["wq"]["w"].astype(x.dtype)).reshape(B, 1, cfg.n_heads, hd)
+    if cfg.use_bias:
+        q = q + p["wq"]["b"].reshape(cfg.n_heads, hd).astype(x.dtype)
+    if cfg.qk_norm:
+        q = apply_norm(p["q_norm"], q, cfg.norm_eps, False)
+    if cfg.pos_type == "rope":
+        q = rope(q, jnp.full((B, 1), pos), cfg.rope_theta)
+
+    if memory_cache is not None:  # cross attention: static precomputed k/v
+        kf = _repeat_kv(memory_cache["k"], cfg.n_heads)
+        vf = _repeat_kv(memory_cache["v"], cfg.n_heads)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kf) * hd**-0.5
+        scores = softcap(scores, cfg.attn_softcap)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(x.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+        y = out.reshape(B, 1, cfg.n_heads * hd) @ p["wo"]["w"].astype(x.dtype)
+        if cfg.use_bias:
+            y = y + p["wo"]["b"].astype(x.dtype)
+        return y, cache
+
+    k_new = (x @ p["wk"]["w"].astype(x.dtype)).reshape(B, 1, cfg.n_kv_heads, hd)
+    v_new = (x @ p["wv"]["w"].astype(x.dtype)).reshape(B, 1, cfg.n_kv_heads, hd)
+    if cfg.use_bias:
+        k_new = k_new + p["wk"]["b"].reshape(cfg.n_kv_heads, hd).astype(x.dtype)
+        v_new = v_new + p["wv"]["b"].reshape(cfg.n_kv_heads, hd).astype(x.dtype)
+    if cfg.qk_norm:
+        k_new = apply_norm(p["k_norm"], k_new, cfg.norm_eps, False)
+    if cfg.pos_type == "rope":
+        k_new = rope(k_new, jnp.full((B, 1), pos), cfg.rope_theta)
+
+    size = cache["k"].shape[1]
+    slot = pos % size
+    if cfg.cache_update == "masked":
+        # per-shard local update: no collectives on a seq-sharded cache
+        sel = (jax.lax.iota(jnp.int32, size) == slot)
+        k_all = jnp.where(sel[None, :, None, None], k_new.astype(cache["k"].dtype), cache["k"])
+        v_all = jnp.where(sel[None, :, None, None], v_new.astype(cache["v"].dtype), cache["v"])
+        pos_all = jnp.where(sel, pos, cache["pos"])
+    else:
+        k_all = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+        v_all = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+        pos_all = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], jnp.full((1,), pos, jnp.int32), slot, axis=0
+        )
+    new_cache = {"k": k_all, "v": v_all, "pos": pos_all}
+
+    ax = cfg.decode_cache_axes
+    if ax:
+        import numpy as _np
+
+        from repro.distributed.sharding import batch_axes, constrain, get_mesh
+
+        mesh = get_mesh()
+        ba = batch_axes(mesh)
+        if B % (int(_np.prod([mesh.shape[a] for a in ba])) or 1) != 0:
+            ba = None
+        k_all = constrain(k_all, ba, ax, None, None)
+        v_all = constrain(v_all, ba, ax, None, None)
+    kf = _repeat_kv(k_all, cfg.n_heads)
+    vf = _repeat_kv(v_all, cfg.n_heads)
+    if ax:
+        kf = constrain(kf, ba, ax, None, None)
+        vf = constrain(vf, ba, ax, None, None)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kf) * hd**-0.5
+    if ax:  # keep scores sharded along the cache sequence axis
+        scores = constrain(scores, ba, None, None, ax)
+    scores = softcap(scores, cfg.attn_softcap)
+    valid = (pos_all >= 0) & (pos_all <= pos)
+    if attn_type == "local":
+        valid &= pos_all > pos - cfg.window
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(x.dtype)
+    if ax:
+        probs = constrain(probs, ba, None, None, ax)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    y = out.reshape(B, 1, cfg.n_heads * hd) @ p["wo"]["w"].astype(x.dtype)
+    if cfg.use_bias:
+        y = y + p["wo"]["b"].astype(x.dtype)
+    return y, new_cache

@@ -1,0 +1,129 @@
+"""Shared neural building blocks (pure functional, dict params)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / np.sqrt(shape[0])
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def norm_init(d, layer_norm: bool, dtype=jnp.float32):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if layer_norm:
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p, x, eps: float, layer_norm: bool):
+    xf = x.astype(jnp.float32)
+    if layer_norm:
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        var = (xf**2).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def linear_init(key, d_in, d_out, use_bias=False, dtype=jnp.float32):
+    p = {"w": _init(key, (d_in, d_out), dtype=dtype)}
+    if use_bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def apply_linear(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def mlp_init(key, d, f, use_bias=False, gated=True, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    if gated:
+        return {
+            "w_gate": linear_init(ks[0], d, f, use_bias, dtype),
+            "w_up": linear_init(ks[1], d, f, use_bias, dtype),
+            "w_down": linear_init(ks[2], f, d, use_bias, dtype),
+        }
+    return {
+        "w_in": linear_init(ks[0], d, f, use_bias, dtype),
+        "w_out": linear_init(ks[1], f, d, use_bias, dtype),
+    }
+
+
+def apply_mlp(p, x):
+    if "w_gate" in p:
+        return apply_linear(
+            p["w_down"], jax.nn.silu(apply_linear(p["w_gate"], x)) * apply_linear(p["w_up"], x)
+        )
+    return apply_linear(p["w_out"], jax.nn.gelu(apply_linear(p["w_in"], x)))
+
+
+def rope(x, positions, theta: float):
+    """Rotary embeddings. x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d: int, offset=0):
+    pos = jnp.arange(seq_len, dtype=jnp.float32) + offset
+    half = d // 2
+    freq = 10000.0 ** (-jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = pos[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def softcap(x, cap: float | None):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def cross_entropy_chunked(logits_fn, x, labels, mask, vocab: int, chunk: int = 4096):
+    """Mean CE without materializing (B,S,V): map over flattened token chunks.
+
+    logits_fn: (T, d) -> (T, V).  mask: (B,S) float weights.
+    """
+    B, S, d = x.shape
+    xt = x.reshape(B * S, d)
+    lt = labels.reshape(B * S)
+    mt = mask.reshape(B * S)
+    T = B * S
+    chunk = min(chunk, T)
+    n_chunks = T // chunk
+    rem = T - n_chunks * chunk
+
+    def one(xc, lc, mc):
+        logits = logits_fn(xc).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[:, None], axis=-1)[:, 0]
+        return ((logz - gold) * mc).sum()
+
+    def body(carry, args):
+        return carry + one(*args), None
+
+    xs = (
+        xt[: n_chunks * chunk].reshape(n_chunks, chunk, d),
+        lt[: n_chunks * chunk].reshape(n_chunks, chunk),
+        mt[: n_chunks * chunk].reshape(n_chunks, chunk),
+    )
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), xs)
+    if rem:
+        total = total + one(xt[-rem:], lt[-rem:], mt[-rem:])
+    return total / jnp.maximum(mt.sum(), 1.0)

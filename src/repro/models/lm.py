@@ -1,0 +1,432 @@
+"""Model assembly: layer programs -> init / train loss / prefill / decode.
+
+All layer stacks run as `lax.scan` over stacked params (HLO depth-independent).
+Decode threads a cache pytree through the same scans.  Families:
+
+  dense/moe/vlm : decoder-only causal LM (vlm prepends stub patch embeddings)
+  encdec        : whisper — bidirectional encoder over stub frame embeddings,
+                  causal decoder with per-layer cross attention
+  hybrid/ssm    : recurrent mixers (RG-LRU, mLSTM, sLSTM) via recurrent.py
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.distributed.sharding import batch_axes, constrain, constrain_batch, get_mesh
+from . import attention as attn
+from . import moe as moe_mod
+from . import recurrent as rec
+from .layers import (
+    _init,
+    apply_mlp,
+    apply_norm,
+    cross_entropy_chunked,
+    mlp_init,
+    norm_init,
+    sinusoidal_positions,
+    softcap,
+)
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, spec: LayerSpec, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 8)
+    p = {}
+    ln = cfg.layer_norm
+    if spec.kind in ("attn", "moe"):
+        p["ln1"] = norm_init(cfg.d_model, ln, dtype)
+        p["attn"] = attn.attention_init(ks[0], cfg, dtype=dtype)
+        if cfg.final_softcap is not None:  # gemma2 sandwich norms
+            p["ln1_post"] = norm_init(cfg.d_model, ln, dtype)
+        if spec.cross_attn:
+            p["ln_cross"] = norm_init(cfg.d_model, ln, dtype)
+            p["cross"] = attn.attention_init(ks[1], cfg, dtype=dtype)
+        if spec.kind == "moe":
+            p["ln2"] = norm_init(cfg.d_model, ln, dtype)
+            p["moe"] = moe_mod.moe_init(ks[2], cfg, dtype)
+        elif spec.has_mlp and cfg.d_ff:
+            p["ln2"] = norm_init(cfg.d_model, ln, dtype)
+            p["mlp"] = mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.use_bias,
+                                gated=not cfg.layer_norm, dtype=dtype)
+            if cfg.final_softcap is not None:
+                p["ln2_post"] = norm_init(cfg.d_model, ln, dtype)
+    elif spec.kind == "rglru":
+        p["ln1"] = norm_init(cfg.d_model, ln, dtype)
+        p["mixer"] = rec.rglru_init(ks[0], cfg, dtype)
+        if spec.has_mlp and cfg.d_ff:
+            p["ln2"] = norm_init(cfg.d_model, ln, dtype)
+            p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.use_bias,
+                                gated=True, dtype=dtype)
+    elif spec.kind == "mlstm":
+        p["ln1"] = norm_init(cfg.d_model, ln, dtype)
+        p["mixer"] = rec.mlstm_init(ks[0], cfg, dtype)
+    elif spec.kind == "slstm":
+        p["ln1"] = norm_init(cfg.d_model, ln, dtype)
+        p["mixer"] = rec.slstm_init(ks[0], cfg, dtype)
+    else:
+        raise ValueError(spec.kind)
+    return p
+
+
+def init_params(key, cfg: ModelConfig, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    params = {
+        "embed": _init(keys[0], (cfg.vocab_size, cfg.d_model), scale=0.02, dtype=dtype),
+        "final_norm": norm_init(cfg.d_model, cfg.layer_norm, dtype),
+        "segments": [],
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = _init(keys[1], (cfg.d_model, cfg.vocab_size),
+                                  scale=0.02, dtype=dtype)
+    for si, seg in enumerate(cfg.segments):
+        seg_key = jax.random.fold_in(keys[2], si)
+
+        def unit_init(k):
+            return {
+                str(j): _layer_init(jax.random.fold_in(k, j), spec, cfg, dtype)
+                for j, spec in enumerate(seg.unit)
+            }
+
+        stacked = jax.vmap(unit_init)(jax.random.split(seg_key, seg.repeats))
+        params["segments"].append({"layers": stacked})
+    if cfg.family == "encdec":
+        enc_cfg = cfg
+        params["enc_segments"] = []
+        k = jax.random.fold_in(keys[3], 0)
+
+        def enc_unit_init(kk):
+            return {"0": _layer_init(kk, LayerSpec(kind="attn", attn_type="bidir"), enc_cfg, dtype)}
+
+        params["enc_segments"].append(
+            {"layers": jax.vmap(enc_unit_init)(jax.random.split(k, cfg.n_enc_layers))}
+        )
+        params["enc_final_norm"] = norm_init(cfg.d_model, cfg.layer_norm, dtype)
+    if cfg.family == "vlm":
+        params["vision_adapter"] = _init(keys[4], (cfg.d_model, cfg.d_model),
+                                         scale=0.02, dtype=dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward blocks
+# ---------------------------------------------------------------------------
+
+def _apply_block(p, x, spec: LayerSpec, cfg: ModelConfig, memory, positions):
+    """One layer forward (train/prefill). Returns (x, aux, cache_entries)."""
+    aux = jnp.float32(0.0)
+    cache = {}
+
+    def gather_seq(h):
+        # Megatron-SP: with a seq-sharded residual stream, all-gather S once
+        # at each sublayer entry (bf16) — GSPMD then reduce-scatters the
+        # sublayer output back to the seq-sharded residual.
+        if cfg.seq_shard or cfg.pure_dp:
+            return constrain_batch(h, pure_dp=cfg.pure_dp)
+        return h
+
+    if spec.kind in ("attn", "moe"):
+        h = gather_seq(apply_norm(p["ln1"], x, cfg.norm_eps, cfg.layer_norm))
+        y, (k, v) = attn.multihead_attention(p["attn"], h, cfg, spec.attn_type,
+                                             positions=positions)
+        if "ln1_post" in p:
+            y = apply_norm(p["ln1_post"], y, cfg.norm_eps, cfg.layer_norm)
+        x = x + y
+        cache["k"], cache["v"] = k, v
+        if spec.cross_attn and memory is not None:
+            h = gather_seq(apply_norm(p["ln_cross"], x, cfg.norm_eps, cfg.layer_norm))
+            y, (ck, cv) = attn.multihead_attention(p["cross"], h, cfg, "bidir",
+                                                   memory=memory)
+            x = x + y
+            cache["cross_k"], cache["cross_v"] = ck, cv
+        if spec.kind == "moe":
+            h = gather_seq(apply_norm(p["ln2"], x, cfg.norm_eps, cfg.layer_norm))
+            y, aux = moe_mod.moe_ffn(p["moe"], h, cfg)
+            x = x + y
+        elif "mlp" in p:
+            h = gather_seq(apply_norm(p["ln2"], x, cfg.norm_eps, cfg.layer_norm))
+            y = apply_mlp(p["mlp"], h)
+            if "ln2_post" in p:
+                y = apply_norm(p["ln2_post"], y, cfg.norm_eps, cfg.layer_norm)
+            x = x + y
+    elif spec.kind == "rglru":
+        h = gather_seq(apply_norm(p["ln1"], x, cfg.norm_eps, cfg.layer_norm))
+        y, cache = rec.rglru_block(p["mixer"], h, cfg)
+        x = x + y
+        if "mlp" in p:
+            h = gather_seq(apply_norm(p["ln2"], x, cfg.norm_eps, cfg.layer_norm))
+            x = x + apply_mlp(p["mlp"], h)
+    elif spec.kind == "mlstm":
+        h = gather_seq(apply_norm(p["ln1"], x, cfg.norm_eps, cfg.layer_norm))
+        y, cache = rec.mlstm_block(p["mixer"], h, cfg)
+        x = x + y
+    elif spec.kind == "slstm":
+        h = gather_seq(apply_norm(p["ln1"], x, cfg.norm_eps, cfg.layer_norm))
+        y, cache = rec.slstm_block(p["mixer"], h, cfg)
+        x = x + y
+    return constrain_batch(x, cfg.seq_shard, cfg.pure_dp), aux, cache
+
+
+def _run_segments(params_segs, segments, x, cfg, memory, positions, collect_cache=False):
+    """Run all segments via lax.scan; optionally collect prefill caches."""
+    aux_total = jnp.float32(0.0)
+    caches = []
+    for seg_params, seg in zip(params_segs, segments):
+        def body(carry, layer_p):
+            xx, aux = carry
+            entries = {}
+            for j, spec in enumerate(seg.unit):
+                fn = _apply_block
+                if cfg.remat:
+                    policy = (
+                        jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                        if cfg.remat_policy == "dots" else None
+                    )
+                    fn = jax.checkpoint(
+                        _apply_block, static_argnums=(2, 3), policy=policy,
+                    )
+                xx, a, cache = fn(layer_p[str(j)], xx, spec, cfg, memory, positions)
+                aux = aux + a
+                entries[str(j)] = cache
+            return (xx, aux), (entries if collect_cache else 0)
+
+        (x, aux_total), ys = jax.lax.scan(
+            body, (x, aux_total), seg_params["layers"],
+            unroll=seg.repeats if cfg.unroll_layers else 1,
+        )
+        caches.append(ys if collect_cache else None)
+    return x, aux_total, caches
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+def _embed_tokens(params, tokens, cfg):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.compute_dtype))
+    if cfg.pos_type == "sinusoidal":
+        x = x + sinusoidal_positions(tokens.shape[1], cfg.d_model).astype(x.dtype)[None]
+    return x
+
+
+def _logits_fn(params, cfg):
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+
+    def fn(xc):
+        logits = xc @ w.astype(xc.dtype)
+        return softcap(logits.astype(jnp.float32), cfg.final_softcap)
+
+    return fn
+
+
+def _assemble_inputs(params, batch, cfg):
+    """tokens (+ stub frontend embeddings) -> (x, labels, mask, memory)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    memory = None
+    if cfg.family == "encdec":
+        enc = batch["enc_embeds"].astype(cdt)
+        enc = enc + sinusoidal_positions(enc.shape[1], cfg.d_model).astype(cdt)[None]
+        memory = enc
+    x = _embed_tokens(params, tokens, cfg)
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.ones(tokens.shape, jnp.float32).at[:, -1].set(0.0)
+    if cfg.family == "vlm":
+        vis = batch["vision_embeds"].astype(cdt) @ params["vision_adapter"].astype(cdt)
+        x = jnp.concatenate([vis, x], axis=1)
+        V = vis.shape[1]
+        labels = jnp.concatenate([jnp.zeros((x.shape[0], V), labels.dtype), labels], 1)
+        mask = jnp.concatenate([jnp.zeros((x.shape[0], V), jnp.float32), mask], 1)
+    return constrain_batch(x, pure_dp=cfg.pure_dp), labels, mask, memory
+
+
+def _run_encoder(params, memory, cfg):
+    if memory is None:
+        return None, jnp.float32(0.0)
+    enc_segs = [None]
+    from repro.configs.base import Segment
+
+    seg = Segment((LayerSpec(kind="attn", attn_type="bidir"),), cfg.n_enc_layers)
+    m, aux, _ = _run_segments(params["enc_segments"], [seg], memory, cfg, None, None)
+    m = apply_norm(params["enc_final_norm"], m, cfg.norm_eps, cfg.layer_norm)
+    return m, aux
+
+
+# ---------------------------------------------------------------------------
+# Train / forward
+# ---------------------------------------------------------------------------
+
+def train_loss(params, batch, cfg: ModelConfig):
+    x, labels, mask, memory = _assemble_inputs(params, batch, cfg)
+    memory, enc_aux = _run_encoder(params, memory, cfg)
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, aux, _ = _run_segments(params["segments"], cfg.segments, x, cfg, memory, positions)
+    x = apply_norm(params["final_norm"], x, cfg.norm_eps, cfg.layer_norm)
+    ce = cross_entropy_chunked(_logits_fn(params, cfg), x, labels, mask, cfg.vocab_size)
+    return ce + 0.01 * (aux + enc_aux)
+
+
+def forward_logits(params, batch, cfg: ModelConfig):
+    """Full-sequence logits (small models / tests only)."""
+    x, _, _, memory = _assemble_inputs(params, batch, cfg)
+    memory, _ = _run_encoder(params, memory, cfg)
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, _, _ = _run_segments(params["segments"], cfg.segments, x, cfg, memory, positions)
+    x = apply_norm(params["final_norm"], x, cfg.norm_eps, cfg.layer_norm)
+    return _logits_fn(params, cfg)(x)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def _empty_layer_cache(spec: LayerSpec, cfg, batch, cache_len, dtype):
+    c = {}
+    if spec.kind in ("attn", "moe"):
+        c = attn.make_cache(cfg, spec.attn_type, batch, cache_len, dtype)
+        if spec.cross_attn:
+            c["cross_k"] = jnp.zeros((batch, cfg.enc_seq, cfg.n_kv_heads, cfg.hd), dtype)
+            c["cross_v"] = jnp.zeros((batch, cfg.enc_seq, cfg.n_kv_heads, cfg.hd), dtype)
+    elif spec.kind == "rglru":
+        c = rec.rglru_state_init(cfg, batch, dtype)
+    elif spec.kind == "mlstm":
+        c = rec.mlstm_state_init(cfg, batch, dtype)
+    elif spec.kind == "slstm":
+        c = rec.slstm_state_init(cfg, batch, dtype)
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
+    """Empty decode cache mirroring the segment structure (stacked on repeats)."""
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    caches = []
+    for seg in cfg.segments:
+        def one(_):
+            return {
+                str(j): _empty_layer_cache(spec, cfg, batch, cache_len, dtype)
+                for j, spec in enumerate(seg.unit)
+            }
+
+        caches.append(jax.vmap(one)(jnp.arange(seg.repeats)))
+    return {"layers": caches, "enc_memory": None, "pos": jnp.int32(0)}
+
+
+def prefill(params, batch, cfg: ModelConfig, cache_len: int):
+    """Run the prompt; returns (cache, last-token logits)."""
+    x, _, _, memory = _assemble_inputs(params, batch, cfg)
+    memory, _ = _run_encoder(params, memory, cfg)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    x, _, raw_caches = _run_segments(
+        params["segments"], cfg.segments, x, cfg, memory, positions, collect_cache=True
+    )
+    x = apply_norm(params["final_norm"], x, cfg.norm_eps, cfg.layer_norm)
+    logits = _logits_fn(params, cfg)(x[:, -1])
+    # build decode caches from collected K/V
+    dtype = jnp.dtype(cfg.compute_dtype)
+    B = x.shape[0]
+    cache = init_cache(cfg, B, cache_len, dtype)
+    for si, (seg, ys) in enumerate(zip(cfg.segments, raw_caches)):
+        for j, spec in enumerate(seg.unit):
+            entry = cache["layers"][si][str(j)]
+            got = ys[str(j)]  # leaves stacked (repeats, B, S, ...)
+            if spec.kind in ("attn", "moe"):
+                k, v = got["k"], got["v"]
+
+                def fill(e_k, e_v, e_pos, kk, vv):
+                    c = attn.fill_cache({"k": e_k, "v": e_v, "pos": e_pos}, kk, vv, 0)
+                    return c["k"], c["v"], c["pos"]
+
+                fk, fv, fp = jax.vmap(fill)(entry["k"], entry["v"], entry["pos"], k, v)
+                entry = {**entry, "k": fk, "v": fv, "pos": fp}
+                if spec.cross_attn:
+                    entry["cross_k"] = got["cross_k"]
+                    entry["cross_v"] = got["cross_v"]
+            else:  # recurrent: the collected final state IS the decode state
+                entry = got
+            cache["layers"][si][str(j)] = entry
+    cache["enc_memory"] = memory
+    cache["pos"] = jnp.int32(S)
+    return cache, logits
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    """One decode step. tokens: (B,) int32; pos: scalar. -> (logits (B,V), cache)."""
+    B = tokens.shape[0]
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens[:, None], axis=0).astype(cdt)
+    if cfg.pos_type == "sinusoidal":
+        x = x + sinusoidal_positions(1, cfg.d_model, offset=pos).astype(cdt)[None]
+    memory = cache.get("enc_memory")
+
+    new_layers = []
+    for si, seg in enumerate(cfg.segments):
+        def body(xx, xs):
+            layer_p, layer_c = xs
+            new_c = {}
+            for j, spec in enumerate(seg.unit):
+                pj, cj = layer_p[str(j)], layer_c[str(j)]
+                if spec.kind in ("attn", "moe"):
+                    h = apply_norm(pj["ln1"], xx, cfg.norm_eps, cfg.layer_norm)
+                    y, upd = attn.decode_attention(
+                        pj["attn"], h, cfg,
+                        {"k": cj["k"], "v": cj["v"], "pos": cj["pos"]},
+                        pos, spec.attn_type,
+                    )
+                    if "ln1_post" in pj:
+                        y = apply_norm(pj["ln1_post"], y, cfg.norm_eps, cfg.layer_norm)
+                    xx = xx + y
+                    new_c[str(j)] = {**cj, **upd}
+                    if spec.cross_attn:
+                        h = apply_norm(pj["ln_cross"], xx, cfg.norm_eps, cfg.layer_norm)
+                        y, _ = attn.decode_attention(
+                            pj["cross"], h, cfg, None, pos, "bidir",
+                            memory_cache={"k": cj["cross_k"], "v": cj["cross_v"]},
+                        )
+                        xx = xx + y
+                    if spec.kind == "moe":
+                        h = apply_norm(pj["ln2"], xx, cfg.norm_eps, cfg.layer_norm)
+                        y, _ = moe_mod.moe_ffn(pj["moe"], h, cfg)
+                        xx = xx + y
+                    elif "mlp" in pj:
+                        h = apply_norm(pj["ln2"], xx, cfg.norm_eps, cfg.layer_norm)
+                        y = apply_mlp(pj["mlp"], h)
+                        if "ln2_post" in pj:
+                            y = apply_norm(pj["ln2_post"], y, cfg.norm_eps, cfg.layer_norm)
+                        xx = xx + y
+                elif spec.kind == "rglru":
+                    h = apply_norm(pj["ln1"], xx, cfg.norm_eps, cfg.layer_norm)
+                    y, st = rec.rglru_step(pj["mixer"], h, cfg, cj)
+                    xx = xx + y
+                    if "mlp" in pj:
+                        h = apply_norm(pj["ln2"], xx, cfg.norm_eps, cfg.layer_norm)
+                        xx = xx + apply_mlp(pj["mlp"], h)
+                    new_c[str(j)] = st
+                elif spec.kind == "mlstm":
+                    h = apply_norm(pj["ln1"], xx, cfg.norm_eps, cfg.layer_norm)
+                    y, st = rec.mlstm_block_step(pj["mixer"], h, cfg, cj)
+                    xx = xx + y
+                    new_c[str(j)] = st
+                elif spec.kind == "slstm":
+                    h = apply_norm(pj["ln1"], xx, cfg.norm_eps, cfg.layer_norm)
+                    y, st = rec.slstm_block_step(pj["mixer"], h, cfg, cj)
+                    xx = xx + y
+                    new_c[str(j)] = st
+            return xx, new_c
+
+        x, seg_cache = jax.lax.scan(
+            body, x, (params["segments"][si]["layers"], cache["layers"][si]),
+            unroll=seg.repeats if cfg.unroll_layers else 1,
+        )
+        new_layers.append(seg_cache)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm_eps, cfg.layer_norm)
+    logits = _logits_fn(params, cfg)(x[:, 0])
+    new_cache = {"layers": new_layers, "enc_memory": memory, "pos": pos + 1}
+    return logits, new_cache

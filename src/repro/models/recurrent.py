@@ -1,0 +1,364 @@
+"""Recurrent mixers: RG-LRU (Griffin/RecurrentGemma), mLSTM and sLSTM (xLSTM).
+
+Parallelization strategy per mixer:
+  * RG-LRU — diagonal linear recurrence -> jax.lax.associative_scan (log-depth).
+  * mLSTM  — matrix-memory recurrence with exponential gating; implemented in
+    the chunkwise-parallel form (intra-chunk attention-like matrix + inter-
+    chunk state carry, log-space stabilized).  A step form serves decode and
+    as the equality oracle (tests assert chunkwise == sequential).
+  * sLSTM  — has hidden-to-hidden recurrence (R_z h_{t-1}) and is inherently
+    sequential: lax.scan over time.  This is an xLSTM property, not an
+    implementation shortcut (see DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _init, linear_init, apply_linear
+
+_LRU_C = 8.0  # Griffin's fixed constant on the recurrence gate
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def rglru_init(key, cfg, dtype=jnp.float32):
+    d, r = cfg.d_model, cfg.lru_width or cfg.d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "wx": linear_init(ks[0], d, r, dtype=dtype),
+        "wgate": linear_init(ks[1], d, r, dtype=dtype),
+        "wa": linear_init(ks[2], r, r, dtype=dtype),
+        "wi_gate": linear_init(ks[3], r, r, dtype=dtype),
+        "wo_proj": linear_init(ks[4], r, d, dtype=dtype),
+        "conv_w": _init(ks[5], (cfg.conv_width, r), scale=0.3, dtype=dtype),
+        "lam": jnp.full((r,), 0.65, dtype),  # Lambda param; a ~ exp(-8*softplus(lam)*sig)
+    }
+
+
+def _causal_conv(u, w):
+    """Depthwise causal conv over time. u: (B,S,r), w: (W,r)."""
+    W = w.shape[0]
+    out = u * w[W - 1].astype(u.dtype)
+    for j in range(1, W):
+        shifted = jnp.pad(u[:, :-j], ((0, 0), (j, 0), (0, 0)))
+        out = out + shifted * w[W - 1 - j].astype(u.dtype)
+    return out
+
+
+def _lru_scan(a, bx):
+    """h_t = a_t * h_{t-1} + bx_t via associative scan over axis 1."""
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    aa, bb = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return bb
+
+
+def rglru_block(p, x, cfg):
+    """Griffin recurrent block. x: (B,S,d) -> (y, final_state)."""
+    gate = jax.nn.gelu(apply_linear(p["wgate"], x))
+    u_pre = apply_linear(p["wx"], x)
+    u = _causal_conv(u_pre, p["conv_w"])
+    uf = u.astype(jnp.float32)
+    ra = jax.nn.sigmoid(uf @ p["wa"]["w"].astype(jnp.float32))
+    log_a = -_LRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * ra
+    a = jnp.exp(log_a)
+    i = jax.nn.sigmoid(uf @ p["wi_gate"]["w"].astype(jnp.float32))
+    bx = jnp.sqrt(jnp.clip(1.0 - a**2, 1e-9)) * (i * uf)
+    h = _lru_scan(a, bx)
+    W = cfg.conv_width
+    conv_tail = jnp.pad(u_pre, ((0, 0), (W - 1, 0), (0, 0)))[:, -(W - 1):]
+    state = {"h": h[:, -1], "conv": conv_tail}
+    y = apply_linear(p["wo_proj"], h.astype(x.dtype) * gate)
+    return y, state
+
+
+def rglru_state_init(cfg, batch: int, dtype):
+    r = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, r), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, r), dtype),
+    }
+
+
+def rglru_step(p, x, cfg, state):
+    """x: (B,1,d) decode step. Returns (y (B,1,d), state)."""
+    gate = jax.nn.gelu(apply_linear(p["wgate"], x))[:, 0]
+    u = apply_linear(p["wx"], x)[:, 0]  # (B, r)
+    hist = jnp.concatenate([state["conv"], u[:, None]], axis=1)  # (B,W,r)
+    w = p["conv_w"].astype(u.dtype)
+    u_c = (hist * w[None]).sum(1)
+    uf = u_c.astype(jnp.float32)
+    ra = jax.nn.sigmoid(uf @ p["wa"]["w"].astype(jnp.float32))
+    log_a = -_LRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * ra
+    a = jnp.exp(log_a)
+    i = jax.nn.sigmoid(uf @ p["wi_gate"]["w"].astype(jnp.float32))
+    h = a * state["h"] + jnp.sqrt(jnp.clip(1.0 - a**2, 1e-9)) * (i * uf)
+    y = apply_linear(p["wo_proj"], (h.astype(x.dtype) * gate)[:, None])
+    return y, {"h": h, "conv": hist[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix memory, exponential gating) — chunkwise parallel
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    di = cfg.d_inner or 2 * d
+    H = cfg.n_heads
+    ks = jax.random.split(key, 9)
+    return {
+        "w_up": linear_init(ks[0], d, di, dtype=dtype),     # value path
+        "w_z": linear_init(ks[1], d, di, dtype=dtype),      # output gate path
+        "conv_w": _init(ks[2], (cfg.conv_width, di), scale=0.3, dtype=dtype),
+        "wq": linear_init(ks[3], di, di, dtype=dtype),
+        "wk": linear_init(ks[4], di, di, dtype=dtype),
+        "wv": linear_init(ks[5], di, di, dtype=dtype),
+        "w_if": linear_init(ks[6], di, 2 * H, dtype=dtype),  # i,f gate logits
+        "w_down": linear_init(ks[7], di, d, dtype=dtype),
+        "skip": jnp.ones((di,), dtype),
+    }
+
+
+def _mlstm_chunk(q, k, v, i_g, f_g, chunk: int):
+    """Chunkwise mLSTM. q,k,v: (B,S,H,p) f32; i_g,f_g: (B,S,H) f32 logits.
+
+    Returns h: (B,S,H,p).  Stabilized in log space; state carried across
+    chunks is (C~ (B,H,p,p), n~ (B,H,p), m (B,H)) with true C = C~ e^m.
+    """
+    B, S, H, p_dim = q.shape
+    L = min(chunk, S)
+    assert S % L == 0
+    N = S // L
+    qc = q.reshape(B, N, L, H, p_dim)
+    kc = k.reshape(B, N, L, H, p_dim)
+    vc = v.reshape(B, N, L, H, p_dim)
+    ic = i_g.reshape(B, N, L, H)
+    fc = jax.nn.log_sigmoid(f_g).reshape(B, N, L, H)
+
+    def body(carry, xs):
+        Ct, nt, mt = carry            # (B,H,p,p), (B,H,p), (B,H)
+        qq, kk, vv, ii, ff = xs        # (B,L,H,p), ..., (B,L,H)
+        F = jnp.cumsum(ff, axis=1)     # (B,L,H) log decay from chunk start (incl t)
+        # intra-chunk log weights: F_t - F_s + i_s for s <= t
+        lw = F[:, :, None, :] - F[:, None, :, :] + ii[:, None, :, :]  # (B,t,s,H)
+        t_idx = jnp.arange(L)
+        causal = t_idx[:, None] >= t_idx[None, :]
+        lw = jnp.where(causal[None, :, :, None], lw, -jnp.inf)
+        a_t = F + mt[:, None, :]                        # initial-state branch
+        b_t = lw.max(axis=2)                            # (B,t,H)
+        m_new = jnp.maximum(a_t, b_t)
+        m_new = jnp.maximum(m_new, -1e30)               # guard -inf
+        # intra contribution
+        D = jnp.exp(lw - m_new[:, :, None, :])          # (B,t,s,H)
+        scores = jnp.einsum("bthp,bshp->btsh", qq, kk) * (p_dim**-0.5)
+        num_intra = jnp.einsum("btsh,bshp->bthp", scores * D, vv)
+        den_intra = (scores * D).sum(axis=2)  # (B,t,H)
+        # inter contribution (initial state)
+        w_init = jnp.exp(a_t - m_new)                   # (B,t,H)
+        num_inter = jnp.einsum("bthp,bhpr->bthr", qq * (p_dim**-0.5), Ct)
+        num_inter = num_inter * w_init[..., None]
+        den_inter = jnp.einsum("bthp,bhp->bth", qq * (p_dim**-0.5), nt) * w_init
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+        # chunk-end state update
+        F_L = F[:, -1, :]                               # (B,H) total chunk decay
+        m_out = jnp.maximum(F_L + mt, (F_L[:, None, :] - F + ii).max(axis=1))
+        w_old = jnp.exp(F_L + mt - m_out)               # (B,H)
+        w_s = jnp.exp(F_L[:, None, :] - F + ii - m_out[:, None, :])  # (B,s,H)
+        C_new = Ct * w_old[..., None, None] + jnp.einsum(
+            "bshp,bshr->bhpr", kk * w_s[..., None], vv
+        )
+        n_new = nt * w_old[..., None] + jnp.einsum("bsh,bshp->bhp", w_s, kk)
+        return (C_new, n_new, m_out), h
+
+    C0 = jnp.zeros((B, H, p_dim, p_dim), jnp.float32)
+    n0 = jnp.zeros((B, H, p_dim), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    xs = (
+        jnp.moveaxis(qc, 1, 0), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+        jnp.moveaxis(ic, 1, 0), jnp.moveaxis(fc, 1, 0),
+    )
+    final, hs = jax.lax.scan(body, (C0, n0, m0), xs)
+    return jnp.moveaxis(hs, 0, 1).reshape(B, S, H, p_dim), final
+
+
+def mlstm_step(q, k, v, i_g, f_g, state):
+    """Single decode step. q,k,v: (B,H,p) f32; i_g,f_g: (B,H) logits."""
+    C, n, m = state["C"], state["n"], state["m"]
+    p_dim = q.shape[-1]
+    lf = jax.nn.log_sigmoid(f_g)
+    m_new = jnp.maximum(lf + m, i_g)
+    w_old = jnp.exp(lf + m - m_new)
+    w_in = jnp.exp(i_g - m_new)
+    C_new = C * w_old[..., None, None] + jnp.einsum("bhp,bhr->bhpr", k * w_in[..., None], v)
+    n_new = n * w_old[..., None] + k * w_in[..., None]
+    num = jnp.einsum("bhp,bhpr->bhr", q * (p_dim**-0.5), C_new)
+    den = jnp.einsum("bhp,bhp->bh", q * (p_dim**-0.5), n_new)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h, {"C": C_new, "n": n_new, "m": m_new}
+
+
+def _mlstm_sequential(q, k, v, i_g, f_g):
+    """Step-by-step oracle for tests."""
+    B, S, H, p_dim = q.shape
+    state = {
+        "C": jnp.zeros((B, H, p_dim, p_dim), jnp.float32),
+        "n": jnp.zeros((B, H, p_dim), jnp.float32),
+        "m": jnp.full((B, H), -1e30, jnp.float32),
+    }
+
+    def body(st, xs):
+        qq, kk, vv, ii, ff = xs
+        h, st = mlstm_step(qq, kk, vv, ii, ff, st)
+        return st, h
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, i_g, f_g))
+    final, hs = jax.lax.scan(body, state, xs)
+    return jnp.moveaxis(hs, 0, 1), final
+
+
+def mlstm_block(p, x, cfg, chunk: int = 256):
+    """xLSTM mLSTM block: up-proj, conv, matrix-memory mixer, gated down-proj.
+
+    Returns (y, final_state) so prefill can seed the decode cache directly.
+    """
+    B, S, d = x.shape
+    di = cfg.d_inner or 2 * d
+    H = cfg.n_heads
+    pd = di // H
+    z = apply_linear(p["w_z"], x)
+    u = apply_linear(p["w_up"], x)
+    c = jax.nn.silu(_causal_conv(u, p["conv_w"]))
+    q = apply_linear(p["wq"], c).reshape(B, S, H, pd).astype(jnp.float32)
+    k = apply_linear(p["wk"], c).reshape(B, S, H, pd).astype(jnp.float32)
+    v = apply_linear(p["wv"], u).reshape(B, S, H, pd).astype(jnp.float32)
+    if_g = apply_linear(p["w_if"], u).astype(jnp.float32)
+    i_g, f_g = if_g[..., :H], if_g[..., H:]
+    h, (Cf, nf, mf) = _mlstm_chunk(q, k, v, i_g, f_g, chunk)
+    h = h.astype(x.dtype)
+    W = cfg.conv_width
+    conv_tail = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))[:, -(W - 1):]
+    state = {"C": Cf, "n": nf, "m": mf, "conv": conv_tail}
+    h = h.reshape(B, S, di) + u * p["skip"].astype(x.dtype)
+    return apply_linear(p["w_down"], h * jax.nn.silu(z)), state
+
+
+def mlstm_state_init(cfg, batch: int, dtype):
+    di = cfg.d_inner or 2 * cfg.d_model
+    H = cfg.n_heads
+    pd = di // H
+    return {
+        "C": jnp.zeros((batch, H, pd, pd), jnp.float32),
+        "n": jnp.zeros((batch, H, pd), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di), dtype),
+    }
+
+
+def mlstm_block_step(p, x, cfg, state):
+    """Decode step. x: (B,1,d)."""
+    B = x.shape[0]
+    di = cfg.d_inner or 2 * cfg.d_model
+    H = cfg.n_heads
+    pd = di // H
+    z = apply_linear(p["w_z"], x)[:, 0]
+    u = apply_linear(p["w_up"], x)[:, 0]
+    hist = jnp.concatenate([state["conv"], u[:, None]], axis=1)
+    w = p["conv_w"].astype(u.dtype)
+    c = jax.nn.silu((hist * w[None]).sum(1))
+    q = apply_linear(p["wq"], c).reshape(B, H, pd).astype(jnp.float32)
+    k = apply_linear(p["wk"], c).reshape(B, H, pd).astype(jnp.float32)
+    v = apply_linear(p["wv"], u).reshape(B, H, pd).astype(jnp.float32)
+    if_g = apply_linear(p["w_if"], u).astype(jnp.float32)
+    i_g, f_g = if_g[..., :H], if_g[..., H:]
+    h, new_inner = mlstm_step(q, k, v, i_g, f_g, state)
+    h = h.reshape(B, di).astype(x.dtype) + u * p["skip"].astype(x.dtype)
+    y = apply_linear(p["w_down"], (h * jax.nn.silu(z))[:, None])
+    return y, {**new_inner, "conv": hist[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, hidden-to-hidden recurrence: inherently sequential)
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(key, 7)
+    p = {
+        "w_zifo": linear_init(ks[0], d, 4 * d, dtype=dtype),
+        "r_zifo": _init(ks[1], (4, H, hd, hd), scale=1.0 / hd**0.5, dtype=dtype),
+        "b_zifo": jnp.zeros((4, d), dtype),
+        # post-mixer gated FFN (proj factor 4/3, xLSTM paper)
+        "w_up_f": linear_init(ks[2], d, (4 * d) // 3, dtype=dtype),
+        "w_gate_f": linear_init(ks[3], d, (4 * d) // 3, dtype=dtype),
+        "w_down_f": linear_init(ks[4], (4 * d) // 3, d, dtype=dtype),
+    }
+    return p
+
+
+def slstm_state_init(cfg, batch: int, dtype):
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_cell(p, xt, state, H: int):
+    """One sLSTM step. xt: (B, 4d) precomputed input projection (f32)."""
+    B = xt.shape[0]
+    d = xt.shape[1] // 4
+    hd = d // H
+    h = state["h"]
+    hh = h.reshape(B, H, hd)
+    rec = jnp.einsum("bhi,ghij->gbhj", hh, p["r_zifo"].astype(jnp.float32))
+    rec = rec.reshape(4, B, d)
+    pre = xt.reshape(B, 4, d).transpose(1, 0, 2) + rec + p["b_zifo"].astype(jnp.float32)[:, None]
+    z_t = jnp.tanh(pre[0])
+    i_log = pre[1]
+    f_log = jax.nn.log_sigmoid(pre[2])
+    o_t = jax.nn.sigmoid(pre[3])
+    m_new = jnp.maximum(f_log + state["m"], i_log)
+    i_p = jnp.exp(i_log - m_new)
+    f_p = jnp.exp(f_log + state["m"] - m_new)
+    c_new = f_p * state["c"] + i_p * z_t
+    n_new = f_p * state["n"] + i_p
+    h_new = o_t * c_new / jnp.maximum(n_new, 1e-6)
+    return {"h": h_new, "c": c_new, "n": n_new, "m": m_new}
+
+
+def slstm_block(p, x, cfg):
+    """x: (B,S,d) -> (y, final_state); lax.scan over time (inherent recurrence)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    xz = (x @ p["w_zifo"]["w"].astype(x.dtype)).astype(jnp.float32)  # (B,S,4d)
+    state = slstm_state_init(cfg, B, x.dtype)
+
+    def body(st, xt):
+        st = _slstm_cell(p, xt, st, H)
+        return st, st["h"]
+
+    final, hs = jax.lax.scan(body, state, jnp.moveaxis(xz, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    ff = apply_linear(p["w_down_f"], jax.nn.silu(apply_linear(p["w_gate_f"], y)) * apply_linear(p["w_up_f"], y))
+    return y + ff, final
+
+
+def slstm_block_step(p, x, cfg, state):
+    """Decode step. x: (B,1,d)."""
+    xz = (x[:, 0] @ p["w_zifo"]["w"].astype(x.dtype)).astype(jnp.float32)
+    st = _slstm_cell(p, xz, state, cfg.n_heads)
+    y = st["h"].astype(x.dtype)[:, None]
+    ff = apply_linear(p["w_down_f"], jax.nn.silu(apply_linear(p["w_gate_f"], y)) * apply_linear(p["w_up_f"], y))
+    return y + ff, st

@@ -1,0 +1,80 @@
+"""AdamW + LR schedules (cosine, WSD) — minimal, fully sharded-state friendly.
+
+Optimizer state mirrors the parameter tree (same shapes/shardings), so FSDP
+parameter sharding automatically gives ZeRO-style sharded optimizer state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    schedule: str = "cosine"  # "cosine" | "wsd" | "constant"
+    decay_frac: float = 0.1   # WSD: fraction of steps spent decaying
+
+
+def lr_at(cfg: AdamWConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    if cfg.schedule == "cosine":
+        t = jnp.clip((step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        return cfg.lr * warm * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    if cfg.schedule == "wsd":  # MiniCPM warmup-stable-decay
+        decay_start = cfg.total_steps * (1 - cfg.decay_frac)
+        t = jnp.clip((step - decay_start) / max(cfg.total_steps - decay_start, 1), 0, 1)
+        return cfg.lr * warm * jnp.exp(jnp.log(0.01) * t)  # exp decay to 1% of lr
+    raise ValueError(cfg.schedule)
+
+
+def init(params):
+    zeros = lambda p: jnp.zeros_like(p)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)))
+
+
+def update(grads, state, params, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def leaf(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + cfg.eps)
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        return (p - lr * upd.astype(p.dtype)).astype(p.dtype), m2, v2
+
+    out = jax.tree.map(leaf, grads, state["m"], state["v"], params)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

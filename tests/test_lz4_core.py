@@ -1,0 +1,177 @@
+"""Unit tests for the numpy golden models, encoder and decoder."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Sequence,
+    compress_greedy,
+    compress_windowed,
+    compress_windowed_multi,
+    decode_block,
+    encode_block,
+    plan_coverage,
+    plan_size,
+)
+from repro.core.reference import fib_hash, le32_words, prev_same_hash
+from repro.core.schemes import window_candidates
+
+
+def roundtrip(data: bytes, plan) -> None:
+    block = encode_block(data, plan)
+    assert decode_block(block) == data
+    assert len(block) == plan_size(plan)
+
+
+class TestPrimitives:
+    def test_le32_words(self):
+        data = np.array([1, 2, 3, 4, 5], dtype=np.uint8)
+        w = le32_words(data)
+        assert w.tolist() == [0x04030201, 0x05040302]
+
+    def test_fib_hash_range(self):
+        words = np.arange(1000, dtype=np.uint32) * 7919
+        for bits in (6, 8, 12, 13):
+            h = fib_hash(words, bits)
+            assert h.min() >= 0 and h.max() < (1 << bits)
+
+    def test_prev_same_hash(self):
+        h = np.array([3, 1, 3, 3, 1, 2])
+        assert prev_same_hash(h).tolist() == [-1, -1, 0, 2, 1, -1]
+
+    def test_window_candidates_window_granular(self):
+        # pws=4: candidates must come from strictly earlier windows.
+        h = np.array([5, 5, 5, 5, 5, 9, 5, 5])
+        cand = window_candidates(h, pws=4)
+        # Positions 0-3 (window 0): no earlier window -> -1.
+        assert cand[:4].tolist() == [-1, -1, -1, -1]
+        # Positions 4,6,7 (window 1): latest hash-5 position in window 0 is 3.
+        assert cand[4] == 3 and cand[6] == 3 and cand[7] == 3
+        assert cand[5] == -1  # hash 9 never seen before
+
+
+class TestGreedy:
+    def test_empty(self):
+        plan = compress_greedy(b"")
+        assert plan == [Sequence(0, 0)]
+        roundtrip(b"", plan)
+
+    def test_incompressible_short(self):
+        data = bytes(range(13))
+        plan = compress_greedy(data)
+        assert plan_coverage(plan) == len(data)
+        roundtrip(data, plan)
+
+    def test_repetitive_compresses(self):
+        data = b"abcdefgh" * 512
+        plan = compress_greedy(data, hash_bits=12)
+        assert plan_size(plan) < len(data) // 10
+        roundtrip(data, plan)
+
+    def test_overlapping_match(self):
+        data = b"a" * 1000
+        plan = compress_greedy(data)
+        roundtrip(data, plan)  # offset < match_len requires byte-wise copy
+
+    def test_max_match_caps_length(self):
+        data = b"x" * 2000
+        plan = compress_greedy(data, max_match=36)
+        assert all(s.match_len <= 36 for s in plan)
+        roundtrip(data, plan)
+
+    def test_capped_not_much_worse(self):
+        data = (b"the quick brown fox jumps over the lazy dog. " * 200)[:8000]
+        free = plan_size(compress_greedy(data, hash_bits=12))
+        capped = plan_size(compress_greedy(data, hash_bits=12, max_match=36))
+        assert capped >= free  # cap can only hurt
+        assert capped < len(data)  # still compresses
+
+    def test_end_of_block_rules(self):
+        data = b"abcd" * 100
+        plan = compress_greedy(data)
+        assert plan[-1].match_len == 0
+        for s in plan[:-1]:
+            assert s.lit_start + s.lit_len + s.match_len <= len(data) - 5
+            assert s.lit_start + s.lit_len <= len(data) - 12
+
+
+class TestWindowed:
+    def test_empty_and_tiny(self):
+        for data in (b"", b"a", b"abc", b"abcdefghijk"):
+            res = compress_windowed(data)
+            assert plan_coverage(res.sequences) == len(data)
+            roundtrip(data, res.sequences)
+
+    def test_repetitive(self):
+        data = b"hello world, " * 600
+        res = compress_windowed(data, hash_bits=12)
+        assert plan_size(res.sequences) < len(data) // 3
+        roundtrip(data, res.sequences)
+
+    def test_bounded_match_length(self):
+        data = b"z" * 4000
+        res = compress_windowed(data, max_match=36)
+        assert res.length.max() <= 36
+        roundtrip(data, res.sequences)
+
+    def test_single_match_per_window(self):
+        data = (b"abcdefgh12345678" * 400)[:6400]
+        res = compress_windowed(data, hash_bits=12)
+        # at most one match per window by construction
+        assert res.emit.dtype == bool
+        roundtrip(data, res.sequences)
+
+    def test_unbounded_variant(self):
+        data = b"q" * 3000
+        res = compress_windowed(data, max_match=None)
+        assert res.length.max() > 36  # unbounded extension reaches far
+        roundtrip(data, res.sequences)
+
+    def test_matches_do_not_overlap(self):
+        rng = np.random.default_rng(0)
+        base = rng.integers(0, 4, 2048, dtype=np.uint8).tobytes()
+        data = base + base[:1024] + base
+        res = compress_windowed(data, hash_bits=10)
+        end = 0
+        for w in np.nonzero(res.emit)[0]:
+            assert res.pos[w] >= end
+            end = res.pos[w] + res.length[w]
+        roundtrip(data, res.sequences)
+
+    def test_ratio_ordering_schemes(self):
+        """Paper Tables I-III ordering: greedy >= single-match >= combined."""
+        data = (b"the cat sat on the mat and the dog sat on the log. " * 300)[:12000]
+        greedy = plan_size(compress_greedy(data, hash_bits=10))
+        single = plan_size(compress_windowed(data, hash_bits=10, max_match=None).sequences)
+        combined = plan_size(compress_windowed(data, hash_bits=10, max_match=36).sequences)
+        assert greedy <= single <= combined
+
+    def test_multi_match_windowed(self):
+        data = b"abcd1234" * 500
+        res = compress_windowed_multi(data, hash_bits=12)
+        roundtrip(data, res.sequences)
+        assert res.matches_per_window.sum() >= 1
+
+
+class TestEncoderDecoder:
+    def test_long_literal_run_extension_bytes(self):
+        data = bytes(np.random.default_rng(1).integers(0, 256, 700, dtype=np.uint8))
+        plan = [Sequence(0, 700)]
+        roundtrip(data, plan)
+
+    def test_long_match_extension_bytes(self):
+        data = b"m" * 5000
+        plan = compress_greedy(data)
+        assert any(s.match_len > 270 for s in plan)
+        roundtrip(data, plan)
+
+    def test_decoder_rejects_bad_offset(self):
+        import pytest
+        from repro.core import LZ4FormatError
+        # token: 1 literal then match with offset 9 > produced output
+        bad = bytes([0x10, ord("a"), 0x09, 0x00])
+        with pytest.raises(LZ4FormatError):
+            decode_block(bad)
+
+    def test_encoder_rejects_bad_plan(self):
+        with pytest.raises(ValueError):
+            encode_block(b"abcdef", [Sequence(0, 3)])  # does not cover block

@@ -1,0 +1,75 @@
+"""Property-based tests (hypothesis) for the system's core invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    compress_greedy,
+    compress_windowed,
+    decode_block,
+    encode_block,
+    plan_coverage,
+    plan_size,
+)
+from repro.core.jax_compressor import compress_block_records, pad_block, records_to_plan
+
+# Byte-stream strategies with different redundancy structure.
+_raw = st.binary(min_size=0, max_size=4096)
+_structured = st.builds(
+    lambda unit, reps, tail: unit * reps + tail,
+    st.binary(min_size=1, max_size=64),
+    st.integers(min_value=1, max_value=200),
+    st.binary(min_size=0, max_size=32),
+)
+_low_entropy = st.builds(
+    lambda seed, n: np.random.default_rng(seed).integers(0, 3, n, dtype=np.uint8).tobytes(),
+    st.integers(0, 2**31),
+    st.integers(0, 4096),
+)
+_any_data = st.one_of(_raw, _structured, _low_entropy)
+
+
+@given(_any_data)
+@settings(max_examples=60, deadline=None)
+def test_greedy_roundtrip(data):
+    plan = compress_greedy(data, hash_bits=10)
+    assert plan_coverage(plan) == len(data)
+    assert decode_block(encode_block(data, plan)) == data
+
+
+@given(_any_data, st.sampled_from([6, 8, 12]), st.sampled_from([12, 36, None]))
+@settings(max_examples=60, deadline=None)
+def test_windowed_roundtrip(data, bits, max_match):
+    res = compress_windowed(data, hash_bits=bits, max_match=max_match)
+    assert plan_coverage(res.sequences) == len(data)
+    assert decode_block(encode_block(data, res.sequences)) == data
+    # no match may start in the last 12 bytes or end past len-5
+    for s in res.sequences[:-1]:
+        start = s.lit_start + s.lit_len
+        assert start <= len(data) - 12
+        assert start + s.match_len <= len(data) - 5
+        assert 1 <= s.offset <= 65535
+
+
+@given(_any_data)
+@settings(max_examples=25, deadline=None)
+def test_jax_engine_equals_golden_and_roundtrips(data):
+    golden = compress_windowed(data, hash_bits=8, max_match=36)
+    buf, n = pad_block(data)
+    rec = compress_block_records(jnp.asarray(buf), jnp.int32(n))
+    plan = records_to_plan(rec, n)
+    assert plan_size(plan) == int(rec.size) == plan_size(golden.sequences)
+    assert decode_block(encode_block(data, plan)) == data
+
+
+@given(_any_data)
+@settings(max_examples=30, deadline=None)
+def test_scheme_ratio_ordering(data):
+    """Restricting the compressor can never shrink the output below the less
+    restricted scheme's output: greedy <= single-match <= single+capped."""
+    greedy = plan_size(compress_greedy(data, hash_bits=8))
+    single = plan_size(compress_windowed(data, hash_bits=8, max_match=None).sequences)
+    combined = plan_size(compress_windowed(data, hash_bits=8, max_match=36).sequences)
+    assert greedy <= single <= combined
+    # worst case bound: one token per 15-ish literals overhead
+    assert combined <= len(data) + len(data) // 255 + 16

@@ -1,0 +1,57 @@
+"""End-to-end system tests: training convergence, failure recovery,
+gradient-compression training, example entry points."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import train as train_mod
+
+
+def _args(tmp_path, **kw):
+    defaults = dict(
+        arch="internlm2-1.8b", scale="tiny", steps=30, batch=4, seq=64,
+        lr=1e-3, ckpt_dir=str(tmp_path), ckpt_every=10, log_every=100,
+        resume=True, async_ckpt=False, grad_compress=False,
+        simulate_failure=None, seed=0,
+    )
+    defaults.update(kw)
+    return type("Args", (), defaults)()
+
+
+def test_training_loss_decreases(tmp_path):
+    out = train_mod.train(_args(tmp_path))
+    losses = out["losses"]
+    first = np.mean(losses[:5])
+    last = np.mean(losses[-5:])
+    assert np.isfinite(last)
+    assert last < first * 0.98, (first, last)
+
+
+def test_failure_recovery_resumes_and_finishes(tmp_path):
+    out = train_mod.train(_args(tmp_path, steps=24, simulate_failure=15, ckpt_every=6))
+    assert len(out["losses"]) >= 24
+    assert np.isfinite(out["final_loss"])
+
+
+def test_recovery_matches_uninterrupted_run(tmp_path):
+    """Bitwise-deterministic pipeline: a crash+restore run must end at the
+    same loss as an uninterrupted run (checkpoint captures full state)."""
+    a = train_mod.train(_args(tmp_path / "a", steps=20, ckpt_every=5))
+    b = train_mod.train(
+        _args(tmp_path / "b", steps=20, ckpt_every=5, simulate_failure=10)
+    )
+    # batches are a pure function of step; state restored from step 10
+    np.testing.assert_allclose(a["final_loss"], b["final_loss"], rtol=1e-4)
+
+
+def test_grad_compressed_training_converges(tmp_path):
+    base = train_mod.train(_args(tmp_path / "fp", steps=25, lr=1e-3))
+    comp = train_mod.train(_args(tmp_path / "q8", steps=25, lr=1e-3, grad_compress=True))
+    # int8+EF tracks fp32 closely on this scale
+    assert abs(comp["final_loss"] - base["final_loss"]) < 0.15 * base["final_loss"]
+
+
+def test_wsd_schedule_selected_for_minicpm(tmp_path):
+    out = train_mod.train(_args(tmp_path, arch="minicpm-2b", steps=8, batch=2, seq=32))
+    assert np.isfinite(out["final_loss"])
