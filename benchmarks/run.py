@@ -16,7 +16,14 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     fast = not args.full
 
-    from . import jax_throughput, table1_window, table2_maxlen, table3_combined, table4_throughput
+    from . import (
+        engine_batched,
+        jax_throughput,
+        table1_window,
+        table2_maxlen,
+        table3_combined,
+        table4_throughput,
+    )
 
     jobs = [
         ("table1_single_vs_multi", table1_window.run,
@@ -29,6 +36,9 @@ def main(argv=None) -> None:
          lambda r: f"ours {r['ours']['gbps']}Gb/s (paper 16.10) baseline {r['baseline_multi_match']['gbps']}Gb/s speedup {r['speedup_vs_baseline']}x (paper 2.648x)"),
         ("jax_engine_throughput", jax_throughput.run,
          lambda r: f"cpu {r['cpu_mbps_batch']}MB/s; v5e roofline {r['tpu_v5e_roofline_gbps_per_chip']}Gb/s/chip"),
+        ("engine_batched", engine_batched.run,
+         lambda r: f"serial {r['serial_blocks_per_s']} blk/s; best batched "
+                   f"{r['speedup_best_vs_serial']}x"),
     ]
     print("name,us_per_call,derived")
     for name, fn, describe in jobs:

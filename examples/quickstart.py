@@ -2,32 +2,37 @@
 
   PYTHONPATH=src python examples/quickstart.py
 
-Covers: compressing bytes with the paper's combined scheme, verifying the
-round trip with the independent decoder, comparing schemes (the paper's
-Tables I-III in miniature), and the hardware cycle model (Table IV).
+Covers: the batched `LZ4Engine` pipeline (one device dispatch per
+micro-batch, vectorized emission, self-describing frame output), the frame
+round trip through `decode_frame`, comparing schemes (the paper's Tables
+I-III in miniature), and the hardware cycle model (Table IV).
 """
 import numpy as np
 
 from repro.core import (
+    LZ4Engine,
     compress_greedy,
     compress_windowed,
     decode_block,
+    decode_frame,
     encode_block,
+    frame_info,
     plan_size,
 )
 from repro.core.cycle_model import ours_throughput
-from repro.core.jax_compressor import compress_bytes
 
 # --- some compressible data -------------------------------------------------
 rng = np.random.default_rng(0)
 data = (b"the quick brown fox jumps over the lazy dog. " * 800)[:32768]
 
-# --- 1. the paper's combined scheme (single match/window + cap 36), JAX -----
-blocks = compress_bytes(data)                       # list of LZ4 blocks
-restored = b"".join(decode_block(b) for b in blocks)
-assert restored == data
-ratio = len(data) / sum(len(b) for b in blocks)
-print(f"combined scheme (JAX engine): ratio {ratio:.3f}, round-trip OK")
+# --- 1. the batched engine: frame in/out, one dispatch per micro-batch ------
+engine = LZ4Engine()                     # paper's combined scheme (S1+S2)
+frame = engine.compress(data)            # self-describing frame bytes
+assert decode_frame(frame) == data       # no out-of-band lengths needed
+info = frame_info(frame)
+ratio = len(data) / len(frame)
+print(f"LZ4Engine: ratio {ratio:.3f}, {info['block_count']} block(s), "
+      f"{engine.stats.dispatches} dispatch(es), frame round-trip OK")
 
 # --- 2. scheme comparison (paper Tables I-III in miniature) ------------------
 greedy = plan_size(compress_greedy(data, hash_bits=8))

@@ -30,7 +30,7 @@ import jax
 import numpy as np
 
 from repro.core.decoder import decode_block
-from repro.core.jax_compressor import compress_bytes
+from repro.core.engine import default_engine
 from repro.core.lz4_types import MAX_BLOCK
 
 
@@ -52,14 +52,16 @@ def _flatten(tree, path=""):
 
 
 def _compress_leaf(raw: bytes, use_jax: bool) -> tuple[list[tuple[bool, bytes]], int]:
+    chunks = [raw[i : i + MAX_BLOCK] for i in range(0, max(len(raw), 1), MAX_BLOCK)]
+    # One engine call per leaf: all of the leaf's blocks go through
+    # micro-batched dispatches instead of one jit call per 64 KB chunk.
+    lz_blocks = (
+        default_engine().compress_to_blocks(raw) if use_jax and len(raw) >= 1024 else None
+    )
     blocks = []
     comp_total = 0
-    for i in range(0, max(len(raw), 1), MAX_BLOCK):
-        chunk = raw[i : i + MAX_BLOCK]
-        if use_jax and len(chunk) >= 1024:
-            lz = compress_bytes(chunk)[0]
-        else:
-            lz = None
+    for i, chunk in enumerate(chunks):
+        lz = lz_blocks[i] if lz_blocks is not None else None
         if lz is not None and len(lz) < len(chunk):
             blocks.append((True, lz))
             comp_total += len(lz)

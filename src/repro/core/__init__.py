@@ -1,10 +1,12 @@
 """Core LZ4 compression library — the paper's contribution.
 
 Public API:
+    LZ4Engine            — batched device-resident pipeline (frame in/out)
     compress_greedy      — software baseline (GitHub-like, multi-match, unbounded)
     compress_windowed    — the paper's single-match / bounded scheme (golden model)
-    compress_blocks_jax  — vectorized JAX engine of the combined scheme (jit)
     encode_block / decode_block — exact LZ4 block format round trip
+    emit_block           — vectorized (prefix-sum) block emission
+    encode_frame / decode_frame — self-describing multi-block container
 """
 from .lz4_types import (  # noqa: F401
     DEFAULT_HASH_BITS,
@@ -18,5 +20,13 @@ from .lz4_types import (  # noqa: F401
 from .reference import compress_greedy, compression_ratio  # noqa: F401
 from .schemes import compress_windowed, compress_windowed_multi  # noqa: F401
 from .encoder import encode_block  # noqa: F401
-from .decoder import decode_block, LZ4FormatError  # noqa: F401
+from .decoder import decode_block, decode_block_bytewise, LZ4FormatError  # noqa: F401
+from .emitter import emit_block, emit_block_from_records  # noqa: F401
+from .frame import (  # noqa: F401
+    FrameFormatError,
+    decode_frame,
+    encode_frame,
+    frame_info,
+)
+from .engine import LZ4Engine  # noqa: F401
 from .corpus import corpus_blocks, corpus_files  # noqa: F401

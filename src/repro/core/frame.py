@@ -1,0 +1,114 @@
+"""Self-describing multi-block container (LZ4-frame-style).
+
+The raw block format needs out-of-band lengths: a list of compressed blocks
+is not decodable without knowing where each block ends and how large it was
+uncompressed.  This container makes `LZ4Engine.compress` output a single
+self-describing byte string:
+
+    frame  := magic(4) | version(1) | block_count(u32 LE) | table | payloads
+    table  := block_count x { usize(u32 LE) | csize_flag(u32 LE) }
+
+`csize_flag` holds the payload size in the low 31 bits; the high bit marks an
+uncompressible block stored raw (payload == original bytes, csize == usize).
+Payloads are concatenated in block order immediately after the table.
+
+Kept deliberately minimal (no checksums, no dictionaries): the point is
+self-description and the raw-passthrough escape hatch the paper's hardware
+also needs for incompressible inputs.
+"""
+from __future__ import annotations
+
+import struct
+
+from .decoder import LZ4FormatError, decode_block
+from .lz4_types import MAX_BLOCK
+
+MAGIC = b"LZ4R"
+VERSION = 1
+RAW_FLAG = 0x80000000
+_HEADER = struct.Struct("<4sBI")
+_ENTRY = struct.Struct("<II")
+
+
+class FrameFormatError(LZ4FormatError):
+    """Malformed frame: bad magic/version, truncation, or lying size fields."""
+
+
+def encode_frame(payloads: list[bytes], usizes: list[int],
+                 raw_flags: list[bool]) -> bytes:
+    """Assemble a frame from per-block payloads.
+
+    payloads  : compressed block bytes (or raw input bytes where flagged)
+    usizes    : uncompressed size of each block
+    raw_flags : True where the payload is stored raw (uncompressible block)
+    """
+    if not (len(payloads) == len(usizes) == len(raw_flags)):
+        raise ValueError("payloads/usizes/raw_flags length mismatch")
+    parts = [_HEADER.pack(MAGIC, VERSION, len(payloads))]
+    for payload, usize, raw in zip(payloads, usizes, raw_flags):
+        if not 0 <= usize <= MAX_BLOCK:
+            raise ValueError(f"block uncompressed size {usize} out of range")
+        if raw and len(payload) != usize:
+            raise ValueError("raw block payload must equal its usize")
+        if len(payload) >= RAW_FLAG:
+            raise ValueError("block payload too large")
+        parts.append(_ENTRY.pack(usize, len(payload) | (RAW_FLAG if raw else 0)))
+    parts.extend(bytes(p) for p in payloads)
+    return b"".join(parts)
+
+
+def frame_info(frame: bytes) -> dict:
+    """Parse and validate the header/table; returns block metadata.
+
+    Raises FrameFormatError without touching any payload bytes.
+    """
+    if len(frame) < _HEADER.size:
+        raise FrameFormatError("truncated frame header")
+    magic, version, count = _HEADER.unpack_from(frame, 0)
+    if magic != MAGIC:
+        raise FrameFormatError(f"bad magic {magic!r}")
+    if version != VERSION:
+        raise FrameFormatError(f"unsupported frame version {version}")
+    table_end = _HEADER.size + count * _ENTRY.size
+    if len(frame) < table_end:
+        raise FrameFormatError("truncated block table")
+    blocks = []
+    off = table_end
+    for i in range(count):
+        usize, cf = _ENTRY.unpack_from(frame, _HEADER.size + i * _ENTRY.size)
+        raw = bool(cf & RAW_FLAG)
+        csize = cf & ~RAW_FLAG
+        if usize > MAX_BLOCK:
+            raise FrameFormatError(f"block {i}: usize {usize} > {MAX_BLOCK}")
+        if raw and csize != usize:
+            raise FrameFormatError(f"block {i}: raw csize {csize} != usize {usize}")
+        blocks.append({"usize": usize, "csize": csize, "raw": raw, "offset": off})
+        off += csize
+    if off != len(frame):
+        raise FrameFormatError(
+            f"frame length {len(frame)} != header-implied {off}"
+        )
+    return {"version": version, "block_count": count, "blocks": blocks}
+
+
+def decode_frame(frame: bytes) -> bytes:
+    """Frame -> original bytes; raises FrameFormatError on any malformation."""
+    info = frame_info(frame)
+    out = bytearray()
+    for i, b in enumerate(info["blocks"]):
+        payload = frame[b["offset"]: b["offset"] + b["csize"]]
+        if b["raw"]:
+            out += payload
+            continue
+        try:
+            data = decode_block(payload, max_out=b["usize"])
+        except FrameFormatError:
+            raise
+        except LZ4FormatError as e:
+            raise FrameFormatError(f"block {i}: {e}") from e
+        if len(data) != b["usize"]:
+            raise FrameFormatError(
+                f"block {i}: decoded {len(data)} bytes, table says {b['usize']}"
+            )
+        out += data
+    return bytes(out)

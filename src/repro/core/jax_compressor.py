@@ -230,12 +230,11 @@ def _match_ext(l):
 def _plan_size(emit, pos, length, n):
     """Exact compressed size from per-window match records (in-graph)."""
     end = jnp.where(emit, pos + length, 0)
-    prev_end = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), jax.lax.cummax(end)[:-1]]
-    )
+    run_end = jax.lax.cummax(end)
+    prev_end = jnp.concatenate([jnp.zeros((1,), jnp.int32), run_end[:-1]])
     lit = pos - prev_end
     per = jnp.where(emit, 1 + _lit_ext(lit) + lit + 2 + _match_ext(length), 0)
-    last_end = jax.lax.cummax(end)[-1]
+    last_end = run_end[-1]
     final_lit = n - last_end
     total = per.sum() + 1 + _lit_ext(final_lit) + final_lit
     return total.astype(jnp.int32)
@@ -360,17 +359,21 @@ def compress_bytes(
     use_pallas: bool = False,
     scan_impl: str = "sequential",
 ) -> list[bytes]:
-    """End-to-end: arbitrary bytes -> list of LZ4 blocks (one per 64 KB)."""
-    from .encoder import encode_block
+    """Deprecated: use :class:`repro.core.engine.LZ4Engine`.
 
-    out = []
-    for i in range(0, max(len(data), 1), MAX_BLOCK):
-        chunk = data[i : i + MAX_BLOCK]
-        buf, n = pad_block(chunk)
-        rec = compress_block_records(
-            jnp.asarray(buf), jnp.int32(n),
-            hash_bits=hash_bits, max_match=max_match,
-            use_pallas=use_pallas, scan_impl=scan_impl,
-        )
-        out.append(encode_block(chunk, records_to_plan(rec, n)))
-    return out
+    Thin compatibility wrapper over the batched engine; still returns the
+    historical list-of-raw-LZ4-blocks shape (no frame, no passthrough).
+    """
+    import warnings
+
+    from .engine import LZ4Engine
+
+    warnings.warn(
+        "compress_bytes is deprecated; use LZ4Engine.compress (framed) or "
+        "LZ4Engine.compress_to_blocks", DeprecationWarning, stacklevel=2,
+    )
+    eng = LZ4Engine(
+        hash_bits=hash_bits, max_match=max_match,
+        use_pallas=use_pallas, scan_impl=scan_impl,
+    )
+    return eng.compress_to_blocks(data)

@@ -14,8 +14,8 @@ import os
 
 import numpy as np
 
-from repro.core.decoder import decode_block
-from repro.core.jax_compressor import compress_bytes
+from repro.core.engine import LZ4Engine
+from repro.core.frame import decode_frame
 
 
 def synth_tokens(seed: int, n: int, vocab: int) -> np.ndarray:
@@ -52,24 +52,18 @@ class ShardedTokenPipeline:
             if not os.path.exists(path):
                 toks = synth_tokens(seed * 1000 + s, shard_tokens, vocab)
                 raw = toks.astype(np.int32).tobytes()
-                blocks = compress_bytes(raw)
+                # Shard files are self-describing frames: no hand-rolled
+                # block-count/length prefixes.
                 with open(path, "wb") as f:
-                    f.write(len(blocks).to_bytes(4, "little"))
-                    for b in blocks:
-                        f.write(len(b).to_bytes(4, "little"))
-                        f.write(b)
+                    f.write(LZ4Engine().compress(raw))
             self.shards.append(path)
         self._cache: dict[int, np.ndarray] = {}
 
     def _load_shard(self, s: int) -> np.ndarray:
         if s not in self._cache:
             with open(self.shards[s], "rb") as f:
-                nb = int.from_bytes(f.read(4), "little")
-                raw = bytearray()
-                for _ in range(nb):
-                    size = int.from_bytes(f.read(4), "little")
-                    raw += decode_block(f.read(size))
-            self._cache[s] = np.frombuffer(bytes(raw), np.int32)
+                raw = decode_frame(f.read())
+            self._cache[s] = np.frombuffer(raw, np.int32)
         return self._cache[s]
 
     def batch(self, step: int, batch: int, seq: int) -> np.ndarray:

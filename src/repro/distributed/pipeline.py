@@ -18,9 +18,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import P
+from jax.sharding import PartitionSpec as P
 
-from .sharding import get_mesh
+from .sharding import get_mesh, shard_map_compat as _shard_map_compat
 
 
 def pipeline_apply(stage_fn, stage_params, x, *, axis: str = "pod", n_micro: int | None = None):
@@ -76,7 +76,7 @@ def pipeline_apply(stage_fn, stage_params, x, *, axis: str = "pod", n_micro: int
         )
         return outbuf
 
-    out = jax.shard_map(
+    out = _shard_map_compat()(
         local,
         mesh=mesh,
         in_specs=(P(axis), P()),

@@ -294,7 +294,7 @@ def run_lz4_cell(multi_pod: bool, scan_impl: str = "associative",
     so cost_analysis is exact (no probe extrapolation needed).
     """
     import jax.numpy as jnp
-    from jax import P
+    from jax.sharding import PartitionSpec as P
     from jax.sharding import NamedSharding
 
     from repro.core.jax_compressor import _PAD, compress_blocks_records

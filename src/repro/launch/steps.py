@@ -9,7 +9,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import P
+from jax.sharding import PartitionSpec as P
 from jax.sharding import NamedSharding
 
 from repro.configs.base import ModelConfig, ShapeConfig

@@ -13,9 +13,13 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import P
+from jax.sharding import PartitionSpec as P
 
-from repro.distributed.sharding import batch_axes, get_mesh
+from repro.distributed.sharding import (
+    batch_axes,
+    get_mesh,
+    shard_map_compat as _shard_map_compat,
+)
 from .layers import _init
 
 
@@ -130,7 +134,7 @@ def moe_ffn(p, x, cfg):
             aux = jax.lax.pmean(aux, ba)
         return y, aux
 
-    fn = jax.shard_map(
+    fn = _shard_map_compat()(
         wrapped,
         mesh=mesh,
         in_specs=(

@@ -17,9 +17,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import P
+from jax.sharding import PartitionSpec as P
 
-from repro.distributed.sharding import get_mesh
+from repro.distributed.sharding import get_mesh, shard_map_compat as _shard_map_compat
 
 
 def ef_init(params):
@@ -60,7 +60,7 @@ def compressed_psum_pod(x):
         return total.astype(jnp.float32) * scale
 
     rest = tuple(a for a in mesh.axis_names if a != "pod")
-    return jax.shard_map(
+    return _shard_map_compat()(
         local, mesh=mesh,
         in_specs=P(*((rest[0] if rest else None,) + (None,) * (x.ndim - 1))),
         out_specs=P(*((rest[0] if rest else None,) + (None,) * (x.ndim - 1))),

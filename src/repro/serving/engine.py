@@ -17,8 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.decoder import decode_block
-from repro.core.jax_compressor import compress_bytes
+from repro.core.engine import default_engine
+from repro.core.frame import decode_frame, encode_frame
 from repro.models import lm
 
 
@@ -86,23 +86,29 @@ class ServingEngine:
 # ---------------------------------------------------------------------------
 
 def offload_cache(cache) -> tuple[list, dict]:
-    """Serialize + LZ4-compress a cache pytree. Returns (blobs, stats)."""
+    """Serialize + LZ4-compress a cache pytree. Returns (blobs, stats).
+
+    Each leaf becomes one self-describing frame: the engine batches all of
+    the leaf's 64 KB blocks into micro-batched dispatches, and uncompressible
+    blocks ride the frame's raw-passthrough flag — no out-of-band `lz4`
+    markers or per-block length lists needed.
+    """
     leaves, treedef = jax.tree.flatten(cache)
     blobs = []
     raw_total = comp_total = 0
     for leaf in leaves:
         arr = np.asarray(leaf)
         raw = arr.tobytes()
-        blocks = compress_bytes(raw) if len(raw) >= 1024 else [raw]
-        is_comp = len(raw) >= 1024
-        size = sum(len(b) for b in blocks)
-        if is_comp and size >= len(raw):  # incompressible: store raw
-            blocks, is_comp, size = [raw], False, len(raw)
-        blobs.append(
-            {"shape": arr.shape, "dtype": str(arr.dtype), "lz4": is_comp, "blocks": blocks}
-        )
+        if len(raw) >= 1024:
+            frame = default_engine().compress(raw)
+        elif raw:
+            # Tiny leaf: a raw single-block frame, no kernel dispatch.
+            frame = encode_frame([raw], [len(raw)], [True])
+        else:
+            frame = encode_frame([], [], [])
+        blobs.append({"shape": arr.shape, "dtype": str(arr.dtype), "frame": frame})
         raw_total += len(raw)
-        comp_total += size
+        comp_total += len(frame)
     stats = {"raw": raw_total, "compressed": comp_total,
              "ratio": raw_total / max(comp_total, 1)}
     return [treedef, blobs], stats
@@ -112,6 +118,6 @@ def restore_cache(obj):
     treedef, blobs = obj
     leaves = []
     for b in blobs:
-        raw = b"".join(decode_block(x) for x in b["blocks"]) if b["lz4"] else b"".join(b["blocks"])
+        raw = decode_frame(b["frame"])
         leaves.append(jnp.asarray(np.frombuffer(raw, np.dtype(b["dtype"])).reshape(b["shape"])))
     return jax.tree.unflatten(treedef, leaves)

@@ -8,7 +8,7 @@ import textwrap
 import jax
 import numpy as np
 import pytest
-from jax import P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import SHAPES, get_config, cells, LONG_CONTEXT_ARCHS
 from repro.distributed import sharding as sh
@@ -82,8 +82,8 @@ _SUBPROC = textwrap.dedent("""
     from repro.launch.dryrun import parse_collectives, _lower_cell
     import dataclasses
 
-    mesh = jax.make_mesh((2, 2, 4), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.distributed.sharding import make_mesh_compat
+    mesh = make_mesh_compat((2, 2, 4), ("pod", "data", "model"))
     cfg = dataclasses.replace(
         get_config("{arch}").reduced(), fsdp=True,
         d_model=128, n_heads=8, head_dim=16, d_ff=256 if get_config("{arch}").d_ff else 0,

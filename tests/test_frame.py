@@ -1,0 +1,265 @@
+"""Frame format, vectorized emitter, batched engine, and decoder fast-path.
+
+Covers the PR-1 acceptance surface:
+  * LZ4Engine.compress -> decode_frame round-trips bit-exactly on random and
+    pathological corpora (empty, all-zeros, incompressible, boundary-straddling);
+  * the vectorized emitter is byte-identical to encode_block (the oracle) on
+    every block of the property suite;
+  * malformed frames are rejected with FrameFormatError;
+  * the chunked decoder fast path equals the byte-by-byte oracle, including
+    overlapping matches (offset < match_len);
+  * the engine issues exactly one device dispatch per micro-batch.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    FrameFormatError,
+    LZ4Engine,
+    Sequence,
+    decode_block,
+    decode_block_bytewise,
+    decode_frame,
+    emit_block_from_records,
+    encode_block,
+    encode_frame,
+    frame_info,
+)
+from repro.core.jax_compressor import (
+    compress_block_records,
+    pad_block,
+    records_to_plan,
+)
+from repro.core.lz4_types import MAX_BLOCK
+
+
+def _rng():
+    return np.random.default_rng(20260729)
+
+
+def _property_corpus() -> dict[str, bytes]:
+    rng = _rng()
+    structured = bytes(rng.integers(0, 16, 64, np.uint8)) * 40
+    return {
+        "empty": b"",
+        "one_byte": b"\x42",
+        "zeros_small": b"\x00" * 777,
+        "zeros_block": b"\x00" * MAX_BLOCK,
+        "incompressible": rng.integers(0, 256, 4096, np.uint8).tobytes(),
+        "structured": structured,
+        "text": b"the quick brown fox jumps over the lazy dog. " * 300,
+        "long_literal_run": (rng.integers(0, 256, 400, np.uint8).tobytes()
+                             + b"Q" * 800
+                             + rng.integers(0, 256, 400, np.uint8).tobytes()),
+        "low_entropy": rng.integers(0, 4, 20000, np.uint8).tobytes(),
+        "full_block": rng.integers(0, 16, MAX_BLOCK, np.uint8).tobytes(),
+    }
+
+
+def _records(data: bytes):
+    import jax.numpy as jnp
+
+    buf, n = pad_block(data)
+    return compress_block_records(jnp.asarray(buf), jnp.int32(n)), n
+
+
+# ---------------------------------------------------------------------------
+# Vectorized emitter == encode_block oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", list(_property_corpus().keys()))
+def test_emitter_bit_identical_to_encode_block(name):
+    data = _property_corpus()[name]
+    rec, n = _records(data)
+    oracle = encode_block(data, records_to_plan(rec, n))
+    fast = emit_block_from_records(data, rec, n)
+    assert fast == oracle
+    assert len(fast) == int(rec.size)
+    assert decode_block(fast) == data
+
+
+def test_emitter_random_lengths():
+    rng = _rng()
+    for size in (1, 14, 15, 16, 255, 270, 271, 4096):
+        data = bytes(rng.integers(0, 8, size, np.uint8))
+        rec, n = _records(data)
+        assert emit_block_from_records(data, rec, n) == encode_block(
+            data, records_to_plan(rec, n)
+        )
+
+
+# ---------------------------------------------------------------------------
+# Frame round trips (engine end-to-end)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine():
+    return LZ4Engine(micro_batch=4)
+
+
+@pytest.mark.parametrize("case", [
+    "empty", "tiny", "all_zeros_multi", "incompressible_multi",
+    "boundary_straddle", "off_by_one",
+])
+def test_frame_roundtrip(engine, case):
+    rng = _rng()
+    data = {
+        "empty": b"",
+        "tiny": b"xyz",
+        "all_zeros_multi": b"\x00" * (2 * MAX_BLOCK + 17),
+        "incompressible_multi": rng.integers(0, 256, MAX_BLOCK + 5000, np.uint8).tobytes(),
+        # A repeated unit straddling the 64 KB boundary: blocks are
+        # independent, so the straddling match must NOT survive framing.
+        "boundary_straddle": (b"ab" * ((MAX_BLOCK - 7) // 2))[: MAX_BLOCK - 7]
+                             + b"pattern-pattern-pattern-" * 1000,
+        "off_by_one": b"z" * (MAX_BLOCK + 1),
+    }[case]
+    frame = engine.compress(data)
+    assert engine.decompress(frame) == data
+    assert decode_frame(frame) == data
+    info = frame_info(frame)
+    assert info["block_count"] == -(-len(data) // MAX_BLOCK) if data else info["block_count"] == 0
+    assert sum(b["usize"] for b in info["blocks"]) == len(data)
+
+
+def test_frame_incompressible_uses_passthrough(engine):
+    data = _rng().integers(0, 256, MAX_BLOCK, np.uint8).tobytes()
+    frame = engine.compress(data)
+    info = frame_info(frame)
+    assert [b["raw"] for b in info["blocks"]] == [True]
+    # Passthrough bounds expansion to the frame header + table.
+    assert len(frame) == len(data) + 9 + 8
+    assert decode_frame(frame) == data
+
+
+def test_frame_roundtrip_random_sizes(engine):
+    rng = _rng()
+    for size in (MAX_BLOCK - 1, MAX_BLOCK, MAX_BLOCK + 1, 3 * MAX_BLOCK + 4242):
+        data = bytes(rng.integers(0, 32, size, np.uint8))
+        assert decode_frame(engine.compress(data)) == data
+
+
+# ---------------------------------------------------------------------------
+# Malformed-frame rejection
+# ---------------------------------------------------------------------------
+
+def _good_frame(engine=None):
+    return (engine or LZ4Engine(micro_batch=1)).compress(b"hello world " * 100)
+
+
+def test_frame_rejects_bad_magic(engine):
+    frame = bytearray(_good_frame(engine))
+    frame[:4] = b"NOPE"
+    with pytest.raises(FrameFormatError, match="magic"):
+        decode_frame(bytes(frame))
+
+
+def test_frame_rejects_bad_version(engine):
+    frame = bytearray(_good_frame(engine))
+    frame[4] = 99
+    with pytest.raises(FrameFormatError, match="version"):
+        decode_frame(bytes(frame))
+
+
+def test_frame_rejects_truncation(engine):
+    frame = _good_frame(engine)
+    for cut in (0, 3, 8, 12, len(frame) - 1):
+        with pytest.raises(FrameFormatError):
+            decode_frame(frame[:cut])
+
+
+def test_frame_rejects_trailing_garbage(engine):
+    with pytest.raises(FrameFormatError):
+        decode_frame(_good_frame(engine) + b"\x00")
+
+
+def test_frame_rejects_lying_usize(engine):
+    frame = bytearray(_good_frame(engine))
+    # usize field of block 0 lives right after the 9-byte header.
+    frame[9:13] = (1199).to_bytes(4, "little")
+    with pytest.raises(FrameFormatError):
+        decode_frame(bytes(frame))
+
+
+def test_frame_rejects_raw_size_mismatch():
+    # Hand-build a frame whose raw flag lies about its payload size.
+    good = encode_frame([b"abcd"], [4], [True])
+    bad = bytearray(good)
+    bad[9:13] = (5).to_bytes(4, "little")  # usize=5, csize still 4
+    with pytest.raises(FrameFormatError):
+        decode_frame(bytes(bad))
+
+
+def test_encode_frame_validates_inputs():
+    with pytest.raises(ValueError):
+        encode_frame([b"x"], [1], [True, False])
+    with pytest.raises(ValueError):
+        encode_frame([b"xy"], [1], [True])  # raw payload != usize
+    with pytest.raises(ValueError):
+        encode_frame([b""], [MAX_BLOCK + 1], [False])
+
+
+# ---------------------------------------------------------------------------
+# Decoder fast path vs byte-by-byte oracle
+# ---------------------------------------------------------------------------
+
+def test_decoder_fastpath_overlapping_matches():
+    # offset < match_len forces pattern replication in the chunked path.
+    for offset, mlen, lead in [(1, 95, b"a"), (2, 40, b"ab"), (3, 100, b"xyz"),
+                               (7, 64, b"restart"), (5, 6, b"olapp")]:
+        data = lead + (lead * (mlen // len(lead) + 2))[:mlen]
+        plan = [Sequence(0, len(lead), mlen, offset), Sequence(len(lead) + mlen, 0)]
+        block = encode_block(data, plan)
+        assert decode_block(block) == decode_block_bytewise(block) == data
+
+
+def test_decoder_fastpath_equals_oracle_on_corpus(engine):
+    for name, data in _property_corpus().items():
+        rec, n = _records(data)
+        block = emit_block_from_records(data, rec, n)
+        assert decode_block(block) == decode_block_bytewise(block) == data, name
+
+
+def test_decoder_fastpath_rejects_same_errors():
+    bad = [b"", b"\xf0", b"\x10", b"\x04abcd\x00\x00", b"\x04abcd\xff\xff"]
+    for blk in bad:
+        with pytest.raises(ValueError):
+            decode_block(blk)
+        with pytest.raises(ValueError):
+            decode_block_bytewise(blk)
+
+
+# ---------------------------------------------------------------------------
+# Engine dispatch batching
+# ---------------------------------------------------------------------------
+
+def test_engine_one_dispatch_per_micro_batch(monkeypatch):
+    eng = LZ4Engine(micro_batch=2)
+    calls = []
+    orig = LZ4Engine._dispatch
+
+    def spy(self, stack, ns):
+        calls.append(stack.shape[0])
+        return orig(self, stack, ns)
+
+    monkeypatch.setattr(LZ4Engine, "_dispatch", spy)
+    data = b"spam and eggs " * 24000  # 5 blocks + change
+    frame = eng.compress(data)
+    assert decode_frame(frame) == data
+    # 6 blocks, micro_batch 2 -> exactly 3 dispatches, each of batch 2.
+    assert calls == [2, 2, 2]
+    assert eng.stats.dispatches == 3
+    assert eng.stats.blocks == 6
+
+
+def test_engine_pads_partial_batch_to_pow2(monkeypatch):
+    eng = LZ4Engine(micro_batch=32)
+    shapes = []
+    orig = LZ4Engine._dispatch
+    monkeypatch.setattr(
+        LZ4Engine, "_dispatch",
+        lambda self, stack, ns: shapes.append(stack.shape[0]) or orig(self, stack, ns),
+    )
+    data = b"ham " * 50000  # 200_000 bytes -> 4 blocks
+    assert decode_frame(eng.compress(data)) == data
+    assert shapes == [4]  # padded to the next power of two, not to 32

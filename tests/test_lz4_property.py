@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) for the system's core invariants."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed in this image")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -71,7 +71,7 @@ class TestCheckpoint:
 
     def test_elastic_restore_with_shardings(self, tmp_path):
         """Restore onto explicit (1-device) shardings — the elastic path."""
-        from jax import P
+        from jax.sharding import PartitionSpec as P
         from jax.sharding import NamedSharding
 
         tree = _tree()
