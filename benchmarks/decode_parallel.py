@@ -1,0 +1,160 @@
+"""Decompression throughput: serial `decode_frame` vs `LZ4DecodeEngine`,
+and seekable `read_range` vs full-decode-then-slice.
+
+Compares, on a multi-block corpus frame (round-trip verified):
+
+  * serial chunked  — `decode_frame_serial` (the pre-PR-2 `decode_frame`:
+    one Python loop over blocks, chunked `decode_block` per block);
+  * serial bytewise — `decode_frame_serial(bytewise=True)`, the
+    byte-at-a-time oracle (lower bound reference);
+  * engine inline   — `LZ4DecodeEngine()` (fused chunked per-block decode,
+    one worker: the default `decode_frame` path);
+  * engine inline planned — same, forced onto the two-phase plan/execute
+    per-block decoder (`two_phase=True`);
+  * engine thread   — workers in {2, 4}, ThreadPoolExecutor;
+  * engine process  — workers in {2, 4}, fork pool (true multi-core).
+
+Configs are timed INTERLEAVED (one rep of each per round, min over rounds)
+so CPU-frequency noise hits every config equally.  The random-access
+section times N scattered 4 KB reads through `FrameReader.read_range`
+(decodes only covering blocks, LRU off to keep it honest) against decoding
+the whole frame per read and slicing.
+
+JSON lands in experiments/benchmarks/decode_parallel.json and is mirrored
+to BENCH_decode_parallel.json at the repo root.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import (
+    FrameReader,
+    LZ4DecodeEngine,
+    LZ4Engine,
+    decode_frame_serial,
+)
+from repro.core.lz4_types import MAX_BLOCK
+
+from .common import save_json
+
+
+def _corpus(n_blocks: int) -> bytes:
+    from repro.core import corpus_blocks
+
+    full = [b for b in corpus_blocks() if len(b) == MAX_BLOCK]
+    reps = -(-n_blocks // len(full))
+    return b"".join((full * reps)[:n_blocks])
+
+
+def _process_available() -> bool:
+    import multiprocessing as mp
+
+    return "fork" in mp.get_all_start_methods()
+
+
+def run(fast: bool = True) -> dict:
+    n_blocks = 16 if fast else 64
+    rounds = 3 if fast else 5
+    data = _corpus(n_blocks)
+    frame = LZ4Engine(micro_batch=32).compress(data)
+
+    configs: dict[str, object] = {
+        "serial_chunked": lambda: decode_frame_serial(frame),
+        "engine_inline": None,  # filled below with engine instances
+    }
+    engines = {
+        "engine_inline": LZ4DecodeEngine(),
+        "engine_inline_planned": LZ4DecodeEngine(two_phase=True),
+    }
+    for w in (2, 4):
+        engines[f"engine_thread_w{w}"] = LZ4DecodeEngine(workers=w,
+                                                         executor="thread")
+    if _process_available():
+        for w in (2, 4):
+            engines[f"engine_process_w{w}"] = LZ4DecodeEngine(
+                workers=w, executor="process")
+    for name, eng in engines.items():
+        configs[name] = (lambda e: lambda: e.decode(frame))(eng)
+
+    # Correctness gate before any timing.
+    for name, fn in configs.items():
+        assert fn() == data, f"{name} round-trip failed"
+
+    best = {name: float("inf") for name in configs}
+    for _ in range(rounds):  # interleaved: every config sees the same noise
+        for name, fn in configs.items():
+            t0 = time.perf_counter()
+            fn()
+            best[name] = min(best[name], time.perf_counter() - t0)
+
+    # Bytewise oracle: far slower; one timed rep is plenty.
+    t0 = time.perf_counter()
+    assert decode_frame_serial(frame, bytewise=True) == data
+    bytewise_s = time.perf_counter() - t0
+
+    serial_s = best["serial_chunked"]
+    out = {
+        "corpus_blocks": n_blocks,
+        "block_kb": 64,
+        "frame_bytes": len(frame),
+        "data_bytes": len(data),
+        "serial_bytewise_ms": round(bytewise_s * 1000, 1),
+        "configs": {},
+    }
+    for name, dt in best.items():
+        out["configs"][name] = {
+            "ms": round(dt * 1000, 1),
+            "mbps": round(len(data) / dt / 1e6, 2),
+            "speedup_vs_serial": round(serial_s / dt, 3),
+        }
+    parallel = [v["speedup_vs_serial"] for k, v in out["configs"].items()
+                if k.startswith("engine_") and k != "engine_inline"]
+    out["best_parallel_speedup"] = max(parallel) if parallel else None
+    out["engine_inline_speedup"] = out["configs"]["engine_inline"][
+        "speedup_vs_serial"]
+
+    # -- random access: read_range vs full-decode-then-slice ----------------
+    rng = np.random.default_rng(0)
+    n_reads, read_len = 32, 4096
+    offsets = [int(rng.integers(0, len(data) - read_len)) for _ in range(n_reads)]
+    reader = FrameReader(frame, cache_blocks=0)
+    for off in offsets[:4]:
+        assert reader.read_range(off, read_len) == data[off: off + read_len]
+
+    t0 = time.perf_counter()
+    for off in offsets:
+        reader.read_range(off, read_len)
+    ranged_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for off in offsets[: max(2, n_reads // 8)]:  # full decode per read is slow
+        decode_frame_serial(frame)[off: off + read_len]
+    full_s = (time.perf_counter() - t0) / max(2, n_reads // 8) * n_reads
+    out["random_access"] = {
+        "reads": n_reads,
+        "read_bytes": read_len,
+        "read_range_ms_per_read": round(ranged_s / n_reads * 1000, 3),
+        "full_decode_ms_per_read": round(full_s / n_reads * 1000, 3),
+        "speedup": round(full_s / ranged_s, 1),
+    }
+
+    for eng in engines.values():
+        eng.close()
+    save_json("decode_parallel", out)
+    root = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_decode_parallel.json")
+    with open(root, "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    print(json.dumps(run(fast=not args.full), indent=1))

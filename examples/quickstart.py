@@ -4,12 +4,16 @@
 
 Covers: the batched `LZ4Engine` pipeline (one device dispatch per
 micro-batch, vectorized emission, self-describing frame output), the frame
-round trip through `decode_frame`, comparing schemes (the paper's Tables
-I-III in miniature), and the hardware cycle model (Table IV).
+round trip through `decode_frame`, the parallel decompression subsystem
+(`LZ4DecodeEngine` + seekable `FrameReader` random access), comparing
+schemes (the paper's Tables I-III in miniature), and the hardware cycle
+model (Table IV).
 """
 import numpy as np
 
 from repro.core import (
+    FrameReader,
+    LZ4DecodeEngine,
     LZ4Engine,
     compress_greedy,
     compress_windowed,
@@ -34,7 +38,26 @@ ratio = len(data) / len(frame)
 print(f"LZ4Engine: ratio {ratio:.3f}, {info['block_count']} block(s), "
       f"{engine.stats.dispatches} dispatch(es), frame round-trip OK")
 
-# --- 2. scheme comparison (paper Tables I-III in miniature) ------------------
+# --- 2. decompression: parallel decode + random access -----------------------
+# decode_frame delegates to the LZ4DecodeEngine (two-phase plan/execute
+# decode; blocks are independent, so an executor="process" engine fans them
+# across cores).  The frame's block table doubles as a seek index:
+# FrameReader.read_range decodes ONLY the 64 KB blocks covering a byte
+# range — no full-frame decompress for partial reads.
+big = (b"the quick brown fox jumps over the lazy dog. " * 8000)  # ~360 KB, 6 blocks
+big_frame = LZ4Engine().compress(big)
+reader = FrameReader(big_frame)
+start, length = 200_000, 1_000
+assert reader.read_range(start, length) == big[start:start + length]
+assert reader.read_block(2) == big[reader.block_range(2)[0]:reader.block_range(2)[1]]
+par = LZ4DecodeEngine(workers=2)           # executor="process" for multi-core
+assert par.decode(big_frame) == big
+blocks_touched = len(reader.blocks_for_range(start, length))
+print(f"random access: read_range({start}, {length}) decoded "
+      f"{blocks_touched}/{reader.block_count} blocks; parallel decode OK")
+par.close()
+
+# --- 3. scheme comparison (paper Tables I-III in miniature) ------------------
 greedy = plan_size(compress_greedy(data, hash_bits=8))
 single = plan_size(compress_windowed(data, hash_bits=8, max_match=None).sequences)
 combined = plan_size(compress_windowed(data, hash_bits=8, max_match=36).sequences)
@@ -42,12 +65,12 @@ print(f"software LZ4 (multi-match) : {len(data)/greedy:.3f}")
 print(f"single-match/window (S1)   : {len(data)/single:.3f}")
 print(f"combined (S1+S2, cap 36)   : {len(data)/combined:.3f}")
 
-# --- 3. why: deterministic hardware throughput (Table IV) --------------------
+# --- 4. why: deterministic hardware throughput (Table IV) --------------------
 t = ours_throughput(len(data))
 print(f"hardware model: {t.bytes_per_cycle:.3f} B/cycle -> "
       f"{list(t.gbps_at.values())[0]:.2f} Gb/s @ 251.57 MHz (paper: 16.10)")
 
-# --- 4. golden-model equivalence ---------------------------------------------
+# --- 5. golden-model equivalence ---------------------------------------------
 res = compress_windowed(data, hash_bits=8, max_match=36)
 blk = encode_block(data[:65536], res.sequences)
 assert decode_block(blk) == data[:65536]

@@ -2,11 +2,15 @@
 
 Public API:
     LZ4Engine            — batched device-resident pipeline (frame in/out)
+    LZ4DecodeEngine      — parallel two-phase (plan/execute) frame decoder
+    FrameReader          — seekable random access over a frame's block table
     compress_greedy      — software baseline (GitHub-like, multi-match, unbounded)
     compress_windowed    — the paper's single-match / bounded scheme (golden model)
     encode_block / decode_block — exact LZ4 block format round trip
+    plan_block / execute_plan   — two-phase block decode building blocks
     emit_block           — vectorized (prefix-sum) block emission
     encode_frame / decode_frame — self-describing multi-block container
+    decode_frame_serial  — serial block-walk oracle for the decode engine
 """
 from .lz4_types import (  # noqa: F401
     DEFAULT_HASH_BITS,
@@ -24,9 +28,23 @@ from .decoder import decode_block, decode_block_bytewise, LZ4FormatError  # noqa
 from .emitter import emit_block, emit_block_from_records  # noqa: F401
 from .frame import (  # noqa: F401
     FrameFormatError,
+    block_crc,
     decode_frame,
+    decode_frame_serial,
     encode_frame,
     frame_info,
+)
+from .decode_plan import (  # noqa: F401
+    BlockPlan,
+    decode_block_planned,
+    execute_plan,
+    plan_block,
+    plan_block_fast,
+)
+from .decode_engine import (  # noqa: F401
+    FrameReader,
+    LZ4DecodeEngine,
+    default_decode_engine,
 )
 from .engine import LZ4Engine  # noqa: F401
 from .corpus import corpus_blocks, corpus_files  # noqa: F401

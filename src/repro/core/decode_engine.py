@@ -1,0 +1,386 @@
+"""Parallel two-phase decompression: the `LZ4DecodeEngine` and `FrameReader`.
+
+The mirror image of engine.py's compress pipeline.  `decode_frame` used to
+walk blocks serially in Python, so every restore path (serving KV-offload,
+checkpoint load, the data pipeline) was bottlenecked on one byte loop.  The
+frame's blocks are independent by construction, which makes the read side
+embarrassingly parallel (Sitaridi et al., arXiv 1606.00519):
+
+  * each block is decoded in two phases — `plan_block_fast` parses the token
+    stream once into flat NumPy copy arrays (feedback-free field extraction,
+    decode_plan.py), `execute_plan` runs the literal/match copies in bulk;
+  * independent blocks fan out across a worker pool.  Three executors:
+
+      "serial"   — decode blocks inline.  The default: the planned decoder
+                   already beats the old serial `decode_frame`, and on
+                   GIL-bound CPython a thread pool cannot add more (see
+                   EXPERIMENTS.md for measurements).
+      "thread"   — ThreadPoolExecutor.  Pays on free-threaded builds and
+                   when block decode offloads to an accelerator; on stock
+                   CPython the GIL serializes the Python residue.
+      "process"  — fork-based ProcessPoolExecutor, blocks round-trip as
+                   bytes.  True multi-core decode on CPython.  Opt-in:
+                   forking a process with live JAX threads is officially
+                   discouraged (workers never touch JAX, and only the pool
+                   fork happens, but create the engine early if you use it).
+
+  * version-2 frames carry per-block CRC32s of the uncompressed content,
+    verified as each block lands, so corruption is caught at the block that
+    suffered it — never returned as silent wrong output.
+
+`FrameReader` adds random access on top (Rapidgzip-style seek index,
+arXiv 2308.08955): the frame's block table maps any decompressed byte range
+to its covering blocks, so `read_range(start, length)` decodes only those
+blocks — partial reads of a multi-gigabyte frame cost O(range), not
+O(frame).  `read_block(i)` fetches a single block, with a small LRU so
+repeated nearby reads (KV-offload restore of one request's slice) decode
+each block once.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import threading
+from collections import OrderedDict
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from .decode_plan import execute_plan, plan_block_fast
+from .decoder import LZ4FormatError, decode_block
+from .frame import FrameFormatError, check_block, frame_info
+from .lz4_types import MAX_BLOCK
+
+__all__ = ["LZ4DecodeEngine", "DecodeStats", "FrameReader",
+           "default_decode_engine"]
+
+_EXECUTORS = ("serial", "thread", "process")
+
+
+@functools.lru_cache(maxsize=1)
+def default_decode_engine() -> "LZ4DecodeEngine":
+    """Process-wide default engine (shared by decode_frame, serving,
+    checkpointing, and the data pipeline).  Serial executor: safe under
+    JAX, and the planned decoder is already faster than the byte loop it
+    replaced; construct an engine with executor="process" for multi-core
+    restores."""
+    return LZ4DecodeEngine()
+
+
+def _decode_planned(payload: bytes, cap: int) -> bytes:
+    """Two-phase decode of one block (plan once, execute in bulk)."""
+    plan = plan_block_fast(payload, max_out=cap)
+    return execute_plan(payload, plan).tobytes()
+
+
+def _frame_block_task(args) -> bytes:
+    """Decode + verify one frame block (runs in a worker for thread/process
+    executors; module-level so it pickles for the process pool)."""
+    payload, usize, crc, index, two_phase = args
+    try:
+        decode = _decode_planned if two_phase else decode_block
+        data = decode(payload, usize)
+    except FrameFormatError:
+        raise
+    except LZ4FormatError as e:
+        raise FrameFormatError(f"block {index}: {e}") from e
+    check_block(index, usize, crc, data)
+    return data
+
+
+def _plain_block_task(args) -> bytes:
+    """Decode one raw LZ4 block (no framing, no checksum)."""
+    payload, usize, index, two_phase = args
+    cap = usize if usize is not None else MAX_BLOCK
+    decode = _decode_planned if two_phase else decode_block
+    data = decode(payload, cap)
+    if usize is not None and len(data) != usize:
+        raise LZ4FormatError(
+            f"block {index}: decoded {len(data)} bytes, expected {usize}"
+        )
+    return data
+
+
+@dataclasses.dataclass
+class DecodeStats:
+    """Counters from the most recent decode call."""
+
+    blocks: int = 0
+    raw_blocks: int = 0
+    bytes_in: int = 0
+    bytes_out: int = 0
+    parallel: bool = False
+
+
+class LZ4DecodeEngine:
+    """Two-phase (plan/execute) frame decoder with pluggable block fan-out.
+
+    >>> eng = LZ4DecodeEngine(workers=4, executor="process")
+    >>> data = eng.decode(frame)             # blocks fan across the pool
+    >>> data[a:b] == FrameReader(frame, engine=eng).read_range(a, b - a)
+    True
+    """
+
+    def __init__(self, workers: int | None = None, executor: str | None = None,
+                 min_parallel_blocks: int = 2, two_phase: bool | None = None):
+        if executor is not None and executor not in _EXECUTORS:
+            raise ValueError(f"executor must be one of {_EXECUTORS}")
+        if workers is not None and workers < 1:
+            raise ValueError("workers must be >= 1")
+        if executor is None:
+            executor = "serial" if (workers or 1) == 1 else "thread"
+        if workers is None:
+            workers = 1 if executor == "serial" else min(4, os.cpu_count() or 1)
+        self.workers = workers
+        self.executor = executor if workers > 1 else "serial"
+        self.min_parallel_blocks = min_parallel_blocks
+        # Per-block strategy: the fused chunked decoder wins single-threaded
+        # on CPython (one loop, no plan materialization), the two-phase
+        # plan/execute decoder releases the GIL through its NumPy phases and
+        # is the shape parallel/accelerator backends consume.  Auto: fused
+        # inline, two-phase in workers.  Both are bit-identical (tested).
+        self.two_phase = (self.executor != "serial") if two_phase is None \
+            else two_phase
+        self.stats = DecodeStats()
+        self._pool = None
+        self._pool_lock = threading.Lock()
+
+    # -- worker pool --------------------------------------------------------
+
+    def _get_pool(self):
+        with self._pool_lock:
+            if self._pool is None:
+                if self.executor == "process":
+                    import multiprocessing as mp
+                    from concurrent.futures import ProcessPoolExecutor
+
+                    self._pool = ProcessPoolExecutor(
+                        self.workers, mp_context=mp.get_context("fork"),
+                    )
+                else:
+                    self._pool = ThreadPoolExecutor(
+                        max_workers=self.workers,
+                        thread_name_prefix="lz4-decode",
+                    )
+            return self._pool
+
+    def close(self) -> None:
+        with self._pool_lock:
+            if self._pool is not None:
+                self._pool.shutdown(wait=True)
+                self._pool = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def _map(self, fn, items: list) -> list:
+        """Run fn over items on the configured executor (inline when the
+        batch is too small for fan-out to pay)."""
+        if (self.executor != "serial" and self.workers > 1
+                and len(items) >= self.min_parallel_blocks):
+            self.stats.parallel = True
+            # ~4 chunks per worker: amortizes the process pool's per-task
+            # IPC (3x measured) while keeping the tail balanced.
+            chunk = max(1, len(items) // (self.workers * 4))
+            # list() so the first worker exception propagates to the caller.
+            return list(self._get_pool().map(fn, items, chunksize=chunk))
+        return [fn(it) for it in items]
+
+    # -- single blocks ------------------------------------------------------
+
+    def decode_block(self, payload: bytes, max_out: int | None = None) -> bytes:
+        """Planned decode of one raw LZ4 block (no framing)."""
+        return execute_plan(
+            payload, plan_block_fast(payload, max_out=max_out)).tobytes()
+
+    def decode_blocks(self, payloads: list[bytes], raws: list[bool],
+                      usizes: list[int] | None = None) -> list[bytes]:
+        """Decode a bag of independent blocks in parallel.
+
+        ``raws[i]`` marks payloads stored uncompressed (returned as-is).
+        ``usizes`` (optional) caps and checks each block's decoded size;
+        without it blocks are capped at MAX_BLOCK.  This is the entry point
+        for non-frame block stores (the checkpoint format keeps its own
+        block index in manifest.json).
+        """
+        if len(payloads) != len(raws):
+            raise ValueError("payloads/raws length mismatch")
+        if usizes is not None and len(usizes) != len(payloads):
+            raise ValueError("usizes length mismatch")
+        self.stats = DecodeStats(
+            blocks=len(payloads), raw_blocks=sum(map(bool, raws)),
+            bytes_in=sum(len(p) for p in payloads),
+        )
+        out: list[bytes | None] = [None] * len(payloads)
+        jobs = []
+        for i, (payload, raw) in enumerate(zip(payloads, raws)):
+            if raw:
+                out[i] = bytes(payload)
+            else:
+                jobs.append((i, (bytes(payload),
+                                 usizes[i] if usizes is not None else None, i,
+                                 self.two_phase)))
+        for (i, _), data in zip(jobs, self._map(_plain_block_task,
+                                                [j for _, j in jobs])):
+            out[i] = data
+        self.stats.bytes_out = sum(len(d) for d in out)
+        return out
+
+    # -- frames -------------------------------------------------------------
+
+    def _decode_entries(self, frame: bytes, entries: list[tuple[int, dict]]
+                        ) -> list[bytes]:
+        """Decode the given (index, table-entry) frame blocks, in order."""
+        out: list[bytes | None] = [None] * len(entries)
+        jobs = []
+        for j, (i, b) in enumerate(entries):
+            payload = frame[b["offset"]: b["offset"] + b["csize"]]
+            if b["raw"]:
+                check_block(i, b["usize"], b["crc"], payload)
+                out[j] = payload
+            else:
+                jobs.append((j, (payload, b["usize"], b["crc"], i,
+                                 self.two_phase)))
+        for (j, _), data in zip(jobs, self._map(_frame_block_task,
+                                                [a for _, a in jobs])):
+            out[j] = data
+        return out
+
+    def decode(self, frame: bytes) -> bytes:
+        """Frame -> original bytes; bit-identical to `decode_frame_serial`.
+
+        Raises FrameFormatError on any malformation, including per-block
+        checksum mismatches on version-2 frames.
+        """
+        info = frame_info(frame)
+        blocks = info["blocks"]
+        self.stats = DecodeStats(
+            blocks=len(blocks),
+            raw_blocks=sum(b["raw"] for b in blocks),
+            bytes_in=len(frame),
+        )
+        parts = self._decode_entries(frame, list(enumerate(blocks)))
+        out = b"".join(parts)
+        self.stats.bytes_out = len(out)
+        return out
+
+
+class FrameReader:
+    """Seekable random-access reader over one frame.
+
+    The frame's block table is the seek index: cumulative block usizes map
+    decompressed offsets to blocks, so `read_range` touches only the blocks
+    covering the requested range and `read_block` exactly one.  Decoded
+    blocks pass through a small LRU (``cache_blocks``) so clustered reads —
+    a KV-offload restore walking one request's slice, a data-pipeline batch
+    re-reading the same shard region — decode each block once.
+
+    >>> r = FrameReader(frame)
+    >>> r.read_range(10, 20) == original[10:30]
+    True
+    """
+
+    def __init__(self, frame: bytes, engine: LZ4DecodeEngine | None = None,
+                 cache_blocks: int = 8):
+        self._frame = bytes(frame)
+        self._engine = engine or default_decode_engine()
+        self._info = frame_info(self._frame)
+        self._blocks = self._info["blocks"]
+        # starts[i] = decompressed offset of block i; starts[-1] = total size.
+        self._starts = np.concatenate(
+            ([0], np.cumsum([b["usize"] for b in self._blocks]))
+        ).astype(np.int64)
+        self._cache_blocks = cache_blocks
+        self._cache: OrderedDict[int, bytes] = OrderedDict()
+        self._cache_lock = threading.Lock()
+
+    # -- index --------------------------------------------------------------
+
+    @property
+    def block_count(self) -> int:
+        return self._info["block_count"]
+
+    @property
+    def usize(self) -> int:
+        """Total decompressed size (from the table; no payload touched)."""
+        return int(self._starts[-1])
+
+    def __len__(self) -> int:
+        return self.usize
+
+    def block_range(self, i: int) -> tuple[int, int]:
+        """Decompressed [start, end) interval of block i."""
+        if not 0 <= i < self.block_count:
+            raise IndexError(f"block {i} out of range [0, {self.block_count})")
+        return int(self._starts[i]), int(self._starts[i + 1])
+
+    def blocks_for_range(self, start: int, length: int) -> range:
+        """Indices of the blocks covering decompressed [start, start+length)."""
+        if start < 0 or length < 0 or start + length > self.usize:
+            raise ValueError(
+                f"range [{start}, {start + length}) outside [0, {self.usize})"
+            )
+        if length == 0:
+            return range(0, 0)
+        lo = int(np.searchsorted(self._starts, start, side="right")) - 1
+        hi = int(np.searchsorted(self._starts, start + length, side="left"))
+        return range(lo, hi)
+
+    # -- reads --------------------------------------------------------------
+
+    def _cache_put(self, i: int, data: bytes) -> None:
+        if self._cache_blocks <= 0:
+            return
+        with self._cache_lock:
+            self._cache[i] = data
+            self._cache.move_to_end(i)
+            while len(self._cache) > self._cache_blocks:
+                self._cache.popitem(last=False)
+
+    def read_block(self, i: int) -> bytes:
+        """Decode (or raw-slice) exactly block i, LRU-cached."""
+        self.block_range(i)  # bounds check
+        with self._cache_lock:
+            if i in self._cache:
+                self._cache.move_to_end(i)
+                return self._cache[i]
+        data = self._engine._decode_entries(
+            self._frame, [(i, self._blocks[i])]
+        )[0]
+        self._cache_put(i, data)
+        return data
+
+    def read_range(self, start: int, length: int) -> bytes:
+        """original[start : start+length], decoding only the covering blocks.
+
+        Blocks already in the LRU are reused; only the missing ones are
+        decoded (in one engine call, so parallel executors still fan out),
+        and those land in the LRU for the next clustered read.
+        """
+        cover = self.blocks_for_range(start, length)
+        if len(cover) == 0:
+            return b""
+        have: dict[int, bytes] = {}
+        with self._cache_lock:
+            for i in cover:
+                if i in self._cache:
+                    self._cache.move_to_end(i)
+                    have[i] = self._cache[i]
+        missing = [i for i in cover if i not in have]
+        if missing:
+            for i, data in zip(missing, self._engine._decode_entries(
+                    self._frame, [(i, self._blocks[i]) for i in missing])):
+                have[i] = data
+                self._cache_put(i, data)
+        joined = have[cover[0]] if len(cover) == 1 else \
+            b"".join(have[i] for i in cover)
+        base = int(self._starts[cover[0]])
+        return joined[start - base: start - base + length]
+
+    def read(self) -> bytes:
+        """Full decode (parallel over all blocks)."""
+        return self._engine.decode(self._frame)

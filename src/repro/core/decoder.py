@@ -42,6 +42,12 @@ def decode_block(block: bytes, max_out: int | None = None) -> bytes:
                     break
         if i + lit_len > n:
             raise LZ4FormatError("truncated literals")
+        # Cap BEFORE appending: a lying length field must not be able to
+        # allocate past max_out (checking after the copy lets a crafted
+        # block overshoot by an arbitrary run, and a final literals-only
+        # sequence used to skip the check entirely).
+        if max_out is not None and len(out) + lit_len > max_out:
+            raise LZ4FormatError("output exceeds limit")
         out += block[i : i + lit_len]
         i += lit_len
         if i == n:
@@ -64,6 +70,8 @@ def decode_block(block: bytes, max_out: int | None = None) -> bytes:
                 match_len += b
                 if b != 255:
                     break
+        if max_out is not None and len(out) + match_len > max_out:
+            raise LZ4FormatError("output exceeds limit")
         src = len(out) - offset
         if offset >= match_len:
             # Non-overlapping: one chunked copy.
@@ -74,8 +82,6 @@ def decode_block(block: bytes, max_out: int | None = None) -> bytes:
             pattern = bytes(out[src:])
             reps = -(-match_len // offset)
             out += (pattern * reps)[:match_len]
-        if max_out is not None and len(out) > max_out:
-            raise LZ4FormatError("output exceeds limit")
     return bytes(out)
 
 
@@ -101,6 +107,8 @@ def decode_block_bytewise(block: bytes, max_out: int | None = None) -> bytes:
                     break
         if i + lit_len > n:
             raise LZ4FormatError("truncated literals")
+        if max_out is not None and len(out) + lit_len > max_out:
+            raise LZ4FormatError("output exceeds limit")
         out += block[i : i + lit_len]
         i += lit_len
         if i == n:
@@ -123,10 +131,10 @@ def decode_block_bytewise(block: bytes, max_out: int | None = None) -> bytes:
                 match_len += b
                 if b != 255:
                     break
+        if max_out is not None and len(out) + match_len > max_out:
+            raise LZ4FormatError("output exceeds limit")
         # Byte-by-byte copy: overlapping matches (offset < match_len) replicate.
         src = len(out) - offset
         for j in range(match_len):
             out.append(out[src + j])
-        if max_out is not None and len(out) > max_out:
-            raise LZ4FormatError("output exceeds limit")
     return bytes(out)

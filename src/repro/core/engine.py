@@ -31,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .emitter import emit_block
-from .frame import decode_frame, encode_frame
+from .frame import block_crc, decode_frame, encode_frame
 from .jax_compressor import _PAD, compress_block_records
 from .lz4_types import (
     DEFAULT_HASH_BITS,
@@ -168,7 +168,7 @@ class LZ4Engine:
         the raw size are stored as raw passthrough, so worst-case expansion
         is the frame header, not LZ4's literal-run overhead.
         """
-        payloads, usizes, raws = [], [], []
+        payloads, usizes, raws, crcs = [], [], [], []
         for chunk, n, emit, pos, length, offset, size in self._records_iter(data):
             if size >= n:
                 payloads.append(chunk)
@@ -178,7 +178,11 @@ class LZ4Engine:
                 payloads.append(emit_block(chunk, emit, pos, length, offset, n))
                 raws.append(False)
             usizes.append(n)
-        frame = encode_frame(payloads, usizes, raws)
+            # Content checksum over the ORIGINAL chunk (only the compressor
+            # ever sees it): makes the frame a version-2, integrity-checked
+            # container — decode verifies per block.
+            crcs.append(block_crc(chunk))
+        frame = encode_frame(payloads, usizes, raws, checksums=crcs)
         self.stats.bytes_out = len(frame)
         return frame
 
@@ -197,5 +201,6 @@ class LZ4Engine:
         ]
 
     def decompress(self, frame: bytes) -> bytes:
-        """Inverse of `compress`; validates the frame throughout."""
+        """Inverse of `compress`; validates the frame (sizes + checksums)
+        throughout.  Delegates to the parallel `LZ4DecodeEngine`."""
         return decode_frame(frame)

@@ -1,4 +1,4 @@
-"""Self-describing multi-block container (LZ4-frame-style).
+"""Self-describing multi-block container (LZ4-frame-style) with a seek index.
 
 The raw block format needs out-of-band lengths: a list of compressed blocks
 is not decodable without knowing where each block ends and how large it was
@@ -6,53 +6,95 @@ uncompressed.  This container makes `LZ4Engine.compress` output a single
 self-describing byte string:
 
     frame  := magic(4) | version(1) | block_count(u32 LE) | table | payloads
-    table  := block_count x { usize(u32 LE) | csize_flag(u32 LE) }
+    table  := block_count x entry
+    entry  := usize(u32 LE) | csize_flag(u32 LE)              (version 1)
+            | usize(u32 LE) | csize_flag(u32 LE) | crc32(u32) (version 2)
 
 `csize_flag` holds the payload size in the low 31 bits; the high bit marks an
 uncompressible block stored raw (payload == original bytes, csize == usize).
 Payloads are concatenated in block order immediately after the table.
+Version 2 adds a CRC32 of each block's *uncompressed* content, so any stored
+corruption — including a flipped literal byte that still parses — is detected
+at decode time instead of surfacing as silent wrong output.
 
-Kept deliberately minimal (no checksums, no dictionaries): the point is
-self-description and the raw-passthrough escape hatch the paper's hardware
-also needs for incompressible inputs.
+The block table is a public seek index (Rapidgzip-style, arXiv 2308.08955):
+blocks are compressed independently, `frame_info` exposes each block's
+`usize`/`csize`/payload `offset` without touching payload bytes, and the
+cumulative sum of `usize` maps any decompressed byte range to the covering
+blocks.  `FrameReader.read_range` (decode_engine.py) uses exactly this to
+decode only the blocks a partial read needs; consumers may likewise seek by
+indexing the table directly.
+
+Kept deliberately minimal otherwise (no dictionaries, no entropy stage): the
+point is self-description, seekability, and the raw-passthrough escape hatch
+the paper's hardware also needs for incompressible inputs.
+
+Decoding entry points:
+
+  decode_frame         — delegates to the parallel two-phase
+                         `LZ4DecodeEngine` (decode_engine.py).
+  decode_frame_serial  — the original serial block walk, kept as the oracle
+                         (`bytewise=True` drops to the byte-at-a-time block
+                         decoder for a fully independent reference).
 """
 from __future__ import annotations
 
+import binascii
 import struct
 
-from .decoder import LZ4FormatError, decode_block
+from .decoder import LZ4FormatError, decode_block, decode_block_bytewise
 from .lz4_types import MAX_BLOCK
 
 MAGIC = b"LZ4R"
-VERSION = 1
+VERSION_V1 = 1
+VERSION_V2 = 2
+VERSION = VERSION_V2  # current writer version (when checksums are provided)
 RAW_FLAG = 0x80000000
 _HEADER = struct.Struct("<4sBI")
-_ENTRY = struct.Struct("<II")
+_ENTRY_V1 = struct.Struct("<II")
+_ENTRY_V2 = struct.Struct("<III")
 
 
 class FrameFormatError(LZ4FormatError):
-    """Malformed frame: bad magic/version, truncation, or lying size fields."""
+    """Malformed frame: bad magic/version, truncation, lying size fields,
+    or (version >= 2) a block checksum mismatch."""
+
+
+def block_crc(data: bytes) -> int:
+    """The frame's per-block checksum: CRC32 of the uncompressed content."""
+    return binascii.crc32(data) & 0xFFFFFFFF
 
 
 def encode_frame(payloads: list[bytes], usizes: list[int],
-                 raw_flags: list[bool]) -> bytes:
+                 raw_flags: list[bool],
+                 checksums: list[int] | None = None) -> bytes:
     """Assemble a frame from per-block payloads.
 
     payloads  : compressed block bytes (or raw input bytes where flagged)
     usizes    : uncompressed size of each block
     raw_flags : True where the payload is stored raw (uncompressible block)
+    checksums : optional per-block `block_crc` of the UNCOMPRESSED content;
+                when given the frame is written as version 2 (verified on
+                decode), otherwise as version 1 (no integrity check).
     """
     if not (len(payloads) == len(usizes) == len(raw_flags)):
         raise ValueError("payloads/usizes/raw_flags length mismatch")
-    parts = [_HEADER.pack(MAGIC, VERSION, len(payloads))]
-    for payload, usize, raw in zip(payloads, usizes, raw_flags):
+    if checksums is not None and len(checksums) != len(payloads):
+        raise ValueError("checksums length mismatch")
+    version = VERSION_V1 if checksums is None else VERSION_V2
+    parts = [_HEADER.pack(MAGIC, version, len(payloads))]
+    for i, (payload, usize, raw) in enumerate(zip(payloads, usizes, raw_flags)):
         if not 0 <= usize <= MAX_BLOCK:
             raise ValueError(f"block uncompressed size {usize} out of range")
         if raw and len(payload) != usize:
             raise ValueError("raw block payload must equal its usize")
         if len(payload) >= RAW_FLAG:
             raise ValueError("block payload too large")
-        parts.append(_ENTRY.pack(usize, len(payload) | (RAW_FLAG if raw else 0)))
+        cf = len(payload) | (RAW_FLAG if raw else 0)
+        if checksums is None:
+            parts.append(_ENTRY_V1.pack(usize, cf))
+        else:
+            parts.append(_ENTRY_V2.pack(usize, cf, checksums[i] & 0xFFFFFFFF))
     parts.extend(bytes(p) for p in payloads)
     return b"".join(parts)
 
@@ -60,29 +102,35 @@ def encode_frame(payloads: list[bytes], usizes: list[int],
 def frame_info(frame: bytes) -> dict:
     """Parse and validate the header/table; returns block metadata.
 
-    Raises FrameFormatError without touching any payload bytes.
+    Raises FrameFormatError without touching any payload bytes.  Each block
+    dict carries the seek-index fields: `usize`, `csize`, `raw`, payload
+    `offset` into the frame, and `crc` (None for version-1 frames).
     """
     if len(frame) < _HEADER.size:
         raise FrameFormatError("truncated frame header")
     magic, version, count = _HEADER.unpack_from(frame, 0)
     if magic != MAGIC:
         raise FrameFormatError(f"bad magic {magic!r}")
-    if version != VERSION:
+    if version not in (VERSION_V1, VERSION_V2):
         raise FrameFormatError(f"unsupported frame version {version}")
-    table_end = _HEADER.size + count * _ENTRY.size
+    entry = _ENTRY_V1 if version == VERSION_V1 else _ENTRY_V2
+    table_end = _HEADER.size + count * entry.size
     if len(frame) < table_end:
         raise FrameFormatError("truncated block table")
     blocks = []
     off = table_end
     for i in range(count):
-        usize, cf = _ENTRY.unpack_from(frame, _HEADER.size + i * _ENTRY.size)
+        fields = entry.unpack_from(frame, _HEADER.size + i * entry.size)
+        usize, cf = fields[0], fields[1]
+        crc = fields[2] if version == VERSION_V2 else None
         raw = bool(cf & RAW_FLAG)
         csize = cf & ~RAW_FLAG
         if usize > MAX_BLOCK:
             raise FrameFormatError(f"block {i}: usize {usize} > {MAX_BLOCK}")
         if raw and csize != usize:
             raise FrameFormatError(f"block {i}: raw csize {csize} != usize {usize}")
-        blocks.append({"usize": usize, "csize": csize, "raw": raw, "offset": off})
+        blocks.append({"usize": usize, "csize": csize, "raw": raw,
+                       "offset": off, "crc": crc})
         off += csize
     if off != len(frame):
         raise FrameFormatError(
@@ -91,24 +139,54 @@ def frame_info(frame: bytes) -> dict:
     return {"version": version, "block_count": count, "blocks": blocks}
 
 
+def check_block(i: int, usize: int, crc: int | None, data: bytes) -> None:
+    """Validate one decoded block against its table entry (size + crc).
+
+    The single source of truth for post-decode block validation — shared by
+    `decode_frame_serial` and the decode engine's worker tasks so the oracle
+    and the engine can never drift on which frames they reject.
+    """
+    if len(data) != usize:
+        raise FrameFormatError(
+            f"block {i}: decoded {len(data)} bytes, table says {usize}"
+        )
+    if crc is not None and block_crc(data) != crc:
+        raise FrameFormatError(f"block {i}: checksum mismatch")
+
+
 def decode_frame(frame: bytes) -> bytes:
-    """Frame -> original bytes; raises FrameFormatError on any malformation."""
+    """Frame -> original bytes; raises FrameFormatError on any malformation.
+
+    Delegates to the process-wide `LZ4DecodeEngine` (two-phase plan/execute
+    decode, independent blocks fanned across a thread pool).  The serial
+    block walk survives as `decode_frame_serial`, the oracle the engine is
+    tested against.
+    """
+    from .decode_engine import default_decode_engine  # local: frame <-> engine
+
+    return default_decode_engine().decode(frame)
+
+
+def decode_frame_serial(frame: bytes, bytewise: bool = False) -> bytes:
+    """Serial oracle: walk blocks in order with the scalar block decoder.
+
+    ``bytewise=True`` uses the byte-at-a-time reference decoder for a fully
+    independent second opinion (slowest, most obviously correct).
+    """
     info = frame_info(frame)
+    decode = decode_block_bytewise if bytewise else decode_block
     out = bytearray()
     for i, b in enumerate(info["blocks"]):
         payload = frame[b["offset"]: b["offset"] + b["csize"]]
         if b["raw"]:
-            out += payload
-            continue
-        try:
-            data = decode_block(payload, max_out=b["usize"])
-        except FrameFormatError:
-            raise
-        except LZ4FormatError as e:
-            raise FrameFormatError(f"block {i}: {e}") from e
-        if len(data) != b["usize"]:
-            raise FrameFormatError(
-                f"block {i}: decoded {len(data)} bytes, table says {b['usize']}"
-            )
+            data = payload
+        else:
+            try:
+                data = decode(payload, max_out=b["usize"])
+            except FrameFormatError:
+                raise
+            except LZ4FormatError as e:
+                raise FrameFormatError(f"block {i}: {e}") from e
+        check_block(i, b["usize"], b["crc"], data)
         out += data
     return bytes(out)

@@ -2,7 +2,11 @@
 
 The synthetic stream mixes zipf-distributed tokens with repeated n-grams so
 the LZ4 stage achieves a real (>1) compression ratio — the shard files on
-disk go through the paper's engine and are decompressed on load.
+disk go through the paper's engine and are decompressed on load through the
+parallel `LZ4DecodeEngine`.  With ``cache_shards=False`` the pipeline never
+materializes a whole shard: each batch row is fetched with
+`FrameReader.read_range`, decoding only the 64 KB blocks covering that row's
+token slice (the frame block table is the seek index).
 
 Restart-friendliness: batches are a pure function of (step, host_id), so a
 resumed job consumes exactly the batches it would have seen (exactly-once per
@@ -14,8 +18,9 @@ import os
 
 import numpy as np
 
+from repro.core.decode_engine import FrameReader, default_decode_engine
 from repro.core.engine import LZ4Engine
-from repro.core.frame import decode_frame
+from repro.core.frame import frame_info
 
 
 def synth_tokens(seed: int, n: int, vocab: int) -> np.ndarray:
@@ -40,11 +45,13 @@ class ShardedTokenPipeline:
 
     def __init__(self, data_dir: str, vocab: int, *, n_shards: int = 4,
                  shard_tokens: int = 65536 // 2, host_id: int = 0, n_hosts: int = 1,
-                 seed: int = 0):
+                 seed: int = 0, cache_shards: bool = True, decode_engine=None):
         self.vocab = vocab
         self.host_id = host_id
         self.n_hosts = n_hosts
         self.data_dir = data_dir
+        self.cache_shards = cache_shards
+        self._engine = decode_engine or default_decode_engine()
         os.makedirs(data_dir, exist_ok=True)
         self.shards = []
         for s in range(n_shards):
@@ -58,29 +65,50 @@ class ShardedTokenPipeline:
                     f.write(LZ4Engine().compress(raw))
             self.shards.append(path)
         self._cache: dict[int, np.ndarray] = {}
+        self._readers: dict[int, FrameReader] = {}
 
     def _load_shard(self, s: int) -> np.ndarray:
         if s not in self._cache:
             with open(self.shards[s], "rb") as f:
-                raw = decode_frame(f.read())
+                raw = self._engine.decode(f.read())
             self._cache[s] = np.frombuffer(raw, np.int32)
         return self._cache[s]
+
+    def _reader(self, s: int) -> FrameReader:
+        """Seekable reader over shard s (frame stays compressed in memory)."""
+        if s not in self._readers:
+            with open(self.shards[s], "rb") as f:
+                self._readers[s] = FrameReader(f.read(), engine=self._engine)
+        return self._readers[s]
+
+    def _shard_tokens(self, s: int) -> int:
+        return self._reader(s).usize // 4 if not self.cache_shards \
+            else len(self._load_shard(s))
+
+    def _row(self, s: int, start: int, seq: int) -> np.ndarray:
+        if self.cache_shards:
+            return self._load_shard(s)[start: start + seq]
+        # Random access: decode only the blocks covering this row's slice.
+        return np.frombuffer(self._reader(s).read_range(start * 4, seq * 4),
+                             np.int32)
 
     def batch(self, step: int, batch: int, seq: int) -> np.ndarray:
         """Deterministic (batch, seq) int32 tokens for this host at `step`."""
         out = np.empty((batch, seq), np.int32)
         for i in range(batch):
             gidx = (step * batch * self.n_hosts) + self.host_id * batch + i
-            shard = self._load_shard(gidx % len(self.shards))
-            n_per = len(shard) - seq
+            s = gidx % len(self.shards)
+            n_per = self._shard_tokens(s) - seq
             start = (gidx * 7919) % max(n_per, 1)
-            out[i] = shard[start : start + seq]
+            out[i] = self._row(s, start, seq)
         return out
 
     def compression_ratio(self) -> float:
         raw = comp = 0
-        for s, path in enumerate(self.shards):
-            arr = self._load_shard(s)
-            raw += arr.nbytes
-            comp += os.path.getsize(path)
+        for path in self.shards:
+            with open(path, "rb") as f:
+                frame = f.read()
+            # The block table alone gives the uncompressed size: no decode.
+            raw += sum(b["usize"] for b in frame_info(frame)["blocks"])
+            comp += len(frame)
         return raw / comp

@@ -17,8 +17,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.decode_engine import FrameReader, default_decode_engine
 from repro.core.engine import default_engine
-from repro.core.frame import decode_frame, encode_frame
+from repro.core.frame import block_crc, encode_frame
 from repro.models import lm
 
 
@@ -103,9 +104,9 @@ def offload_cache(cache) -> tuple[list, dict]:
             frame = default_engine().compress(raw)
         elif raw:
             # Tiny leaf: a raw single-block frame, no kernel dispatch.
-            frame = encode_frame([raw], [len(raw)], [True])
+            frame = encode_frame([raw], [len(raw)], [True], checksums=[block_crc(raw)])
         else:
-            frame = encode_frame([], [], [])
+            frame = encode_frame([], [], [], checksums=[])
         blobs.append({"shape": arr.shape, "dtype": str(arr.dtype), "frame": frame})
         raw_total += len(raw)
         comp_total += len(frame)
@@ -114,10 +115,68 @@ def offload_cache(cache) -> tuple[list, dict]:
     return [treedef, blobs], stats
 
 
-def restore_cache(obj):
+def restore_cache(obj, decode_engine=None):
+    """Full restore: every leaf frame through the parallel decode engine."""
     treedef, blobs = obj
+    eng = decode_engine or default_decode_engine()
     leaves = []
     for b in blobs:
-        raw = decode_frame(b["frame"])
+        raw = eng.decode(b["frame"])
         leaves.append(jnp.asarray(np.frombuffer(raw, np.dtype(b["dtype"])).reshape(b["shape"])))
     return jax.tree.unflatten(treedef, leaves)
+
+
+class OffloadedCacheReader:
+    """Random access into an offloaded cache without a full restore.
+
+    A paused session's cache can be multi-GB; resuming one request, or
+    inspecting one layer's KV slice, should not pay a full-tree decompress.
+    Each leaf frame gets a lazy `FrameReader`, so a read decodes only the
+    64 KB blocks covering the requested element range (the frame block
+    table is the seek index) — single-block reads stay single-block.
+
+    >>> rdr = OffloadedCacheReader(blob)
+    >>> rdr.read_leaf(3, start=128, count=64)   # 64 elements, ~1 block decoded
+    """
+
+    def __init__(self, obj, decode_engine=None):
+        self._treedef, self._blobs = obj
+        self._engine = decode_engine or default_decode_engine()
+        self._readers: list[FrameReader | None] = [None] * len(self._blobs)
+
+    def __len__(self) -> int:
+        return len(self._blobs)
+
+    def leaf_meta(self, i: int) -> tuple[tuple, np.dtype]:
+        b = self._blobs[i]
+        return tuple(b["shape"]), np.dtype(b["dtype"])
+
+    def _reader(self, i: int) -> FrameReader:
+        if self._readers[i] is None:
+            self._readers[i] = FrameReader(self._blobs[i]["frame"],
+                                           engine=self._engine)
+        return self._readers[i]
+
+    def read_leaf_bytes(self, i: int, start: int = 0,
+                        length: int | None = None) -> bytes:
+        """Byte range of leaf i's serialized buffer (seek-indexed decode)."""
+        reader = self._reader(i)
+        if length is None:
+            length = reader.usize - start
+        return reader.read_range(start, length)
+
+    def read_leaf(self, i: int, start: int = 0,
+                  count: int | None = None) -> np.ndarray:
+        """Flat element slice [start, start+count) of leaf i."""
+        shape, dtype = self.leaf_meta(i)
+        total = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        if count is None:
+            count = total - start
+        if start < 0 or count < 0 or start + count > total:
+            raise ValueError(f"slice [{start}, {start + count}) outside leaf of {total}")
+        raw = self.read_leaf_bytes(i, start * dtype.itemsize, count * dtype.itemsize)
+        return np.frombuffer(raw, dtype)
+
+    def restore(self):
+        """Full pytree restore (equivalent to `restore_cache`)."""
+        return restore_cache([self._treedef, self._blobs], self._engine)

@@ -1,0 +1,487 @@
+"""Parallel decompression subsystem (PR-2 acceptance surface).
+
+  * plan/execute decode (`decode_block_planned`) is bit-identical to both
+    serial oracles on random, structured, and overlap-heavy adversarial
+    blocks — including blocks engineered to exercise the vectorized wave
+    path and the sequential fallback;
+  * `LZ4DecodeEngine.decode` equals `decode_frame_serial` (and the original
+    input) on the full corpus, at 1 and 4 workers, including raw-passthrough
+    blocks;
+  * `FrameReader.read_range(start, length)` equals `original[start:start+length]`
+    for randomized and boundary ranges, decoding only the covering blocks;
+  * the decoder `max_out` cap is enforced BEFORE literal appends and match
+    copies (a lying length field can no longer overshoot the cap);
+  * version-2 frames detect content corruption via per-block CRC32.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    FrameFormatError,
+    FrameReader,
+    LZ4DecodeEngine,
+    LZ4Engine,
+    LZ4FormatError,
+    Sequence,
+    decode_block,
+    decode_block_bytewise,
+    decode_block_planned,
+    decode_frame,
+    decode_frame_serial,
+    encode_block,
+    encode_frame,
+    execute_plan,
+    plan_block,
+)
+from repro.core.lz4_types import MAX_BLOCK
+
+
+def _rng():
+    return np.random.default_rng(20260730)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return LZ4Engine(micro_batch=4)
+
+
+def _block_corpus() -> dict[str, bytes]:
+    rng = _rng()
+    return {
+        "empty": b"",
+        "one": b"\x51",
+        "text": b"the quick brown fox jumps over the lazy dog. " * 400,
+        "zeros": b"\x00" * MAX_BLOCK,
+        "low_entropy": rng.integers(0, 4, 30000, np.uint8).tobytes(),
+        "incompressible": rng.integers(0, 256, 4096, np.uint8).tobytes(),
+        "structured": bytes(rng.integers(0, 16, 64, np.uint8)) * 40,
+        "literal_tail": rng.integers(0, 256, 700, np.uint8).tobytes()
+                        + b"Q" * 900
+                        + rng.integers(0, 256, 300, np.uint8).tobytes(),
+    }
+
+
+def _frame_corpus(engine) -> dict[str, bytes]:
+    rng = _rng()
+    return {
+        "empty": b"",
+        "tiny": b"xyz",
+        "multi_text": b"spam and eggs and ham, " * 12000,
+        "zeros_multi": b"\x00" * (2 * MAX_BLOCK + 17),
+        "raw_multi": rng.integers(0, 256, MAX_BLOCK + 5000, np.uint8).tobytes(),
+        "mixed": ((b"ab" * MAX_BLOCK)[:MAX_BLOCK - 7]
+                  + rng.integers(0, 256, MAX_BLOCK, np.uint8).tobytes()
+                  + b"pattern-" * 4000),
+    }
+
+
+def _encode_oracle(data: bytes) -> bytes:
+    from repro.core import compress_windowed
+
+    res = compress_windowed(data, hash_bits=8, max_match=36)
+    return encode_block(data, res.sequences)
+
+
+# ---------------------------------------------------------------------------
+# plan/execute vs serial oracles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", list(_block_corpus().keys()))
+def test_planned_decode_equals_oracles(name):
+    data = _block_corpus()[name]
+    blk = _encode_oracle(data)
+    assert decode_block_planned(blk) == decode_block(blk) \
+        == decode_block_bytewise(blk) == data
+
+
+def test_planned_decode_overlap_heavy():
+    # offset < match_len forces pattern replication; chains of such matches
+    # force the wave scheduler into its sequential fallback.
+    for offset, mlen, lead in [(1, 95, b"a"), (2, 40, b"ab"), (3, 100, b"xyz"),
+                               (7, 64, b"restart"), (5, 6, b"olapp"),
+                               (1, 5000, b"z"), (2, 2000, b"pq")]:
+        data = lead + (lead * (mlen // len(lead) + 2))[:mlen]
+        plan = [Sequence(0, len(lead), mlen, offset), Sequence(len(lead) + mlen, 0)]
+        blk = encode_block(data, plan)
+        assert decode_block_planned(blk) == decode_block_bytewise(blk) == data
+
+
+def test_planned_decode_random_plans():
+    # Adversarial random sequences built directly (not via a compressor):
+    # random mixtures of literals and (frequently overlapping) matches,
+    # with the ground truth materialized by the bytewise replication rule.
+    rng = _rng()
+    for trial in range(25):
+        src = bytes(rng.integers(0, 256, 4096, np.uint8))
+        data = bytearray()
+        plan = []
+        cursor = 0
+        for _ in range(int(rng.integers(1, 40))):
+            lit = int(rng.integers(0, 30))
+            lit_start = len(data)
+            data += src[cursor:cursor + lit]
+            cursor += lit
+            if len(data) == 0:
+                continue  # nothing consumed, nothing to record
+            offset = int(rng.integers(1, min(len(data), 65535) + 1))
+            mlen = int(rng.integers(4, 60))
+            plan.append(Sequence(lit_start, lit, mlen, offset))
+            s = len(data) - offset
+            for j in range(mlen):
+                data.append(data[s + j])
+        plan.append(Sequence(len(data), 0))
+        data = bytes(data)
+        blk = encode_block(data, plan)
+        assert decode_block_planned(blk) == decode_block_bytewise(blk) == data, trial
+
+
+def test_execute_plan_wave_path_many_independent_matches():
+    # A long literal prefix followed by many matches that all source far
+    # enough back to be ready in early waves -> vectorized gather path.
+    rng = _rng()
+    prefix = rng.integers(0, 256, 600, np.uint8).tobytes()
+    data = bytearray(prefix)
+    plan = [Sequence(0, len(prefix), 16, 300)]
+    s = len(data) - 300
+    data += bytes(data[s:s + 16])
+    for k in range(150):
+        off = 200 + (k * 3) % 300
+        plan.append(Sequence(len(data), 0, 12, off))
+        s = len(data) - off
+        data += bytes(data[s:s + 12])
+    plan.append(Sequence(len(data), 0))
+    data = bytes(data)
+    blk = encode_block(data, plan)
+    assert decode_block_planned(blk) == decode_block_bytewise(blk) == data
+
+
+def test_execute_plan_into_view():
+    data = b"abcabcabc" * 100
+    blk = _encode_oracle(data)
+    plan = plan_block(blk)
+    buf = np.zeros(plan.usize + 10, np.uint8)
+    execute_plan(blk, plan, out=buf[5:5 + plan.usize])
+    assert buf[5:5 + plan.usize].tobytes() == data
+    assert not buf[:5].any() and not buf[-5:].any()
+    with pytest.raises(ValueError, match="out buffer"):
+        execute_plan(blk, plan, out=buf)
+
+
+def test_plan_block_rejects_same_errors():
+    bad = [b"", b"\xf0", b"\x10", b"\x04abcd\x00\x00", b"\x04abcd\xff\xff"]
+    for blk in bad:
+        with pytest.raises(LZ4FormatError):
+            plan_block(blk)
+
+
+# ---------------------------------------------------------------------------
+# max_out cap enforced before copies (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+def _huge_match_block() -> bytes:
+    # 1 literal, then a match claiming ~300 KB via extension bytes, then the
+    # mandatory final literals-only sequence (empty).
+    ext = b"\xff" * 1200 + b"\x10"   # match_len = 19 + 255*1200 + 16
+    return b"\x1fa" + b"\x01\x00" + ext + b"\x00"
+
+
+def _literal_tail_block(n: int) -> bytes:
+    # Final literals-only sequence of n bytes (n >= 15).
+    ext_val = n - 15
+    ext = []
+    while True:
+        ext.append(min(ext_val, 255))
+        if ext[-1] < 255:
+            break
+        ext_val -= 255
+    return bytes([0xF0] + ext) + b"L" * n
+
+
+@pytest.mark.parametrize("decoder", [decode_block, decode_block_bytewise,
+                                     decode_block_planned])
+def test_max_out_enforced_before_match_copy(decoder):
+    blk = _huge_match_block()
+    with pytest.raises(LZ4FormatError, match="exceeds"):
+        decoder(blk, max_out=64)
+    # Sanity: without a cap the block is valid and huge.
+    assert len(decoder(blk)) == 1 + 19 + 255 * 1200 + 16
+
+
+@pytest.mark.parametrize("decoder", [decode_block, decode_block_bytewise,
+                                     decode_block_planned])
+def test_max_out_enforced_on_final_literals(decoder):
+    # Pre-fix, the final literals-only sequence skipped the cap entirely.
+    blk = _literal_tail_block(1000)
+    assert decoder(blk) == b"L" * 1000
+    with pytest.raises(LZ4FormatError, match="exceeds"):
+        decoder(blk, max_out=999)
+    assert decoder(blk, max_out=1000) == b"L" * 1000
+
+
+# ---------------------------------------------------------------------------
+# Engine vs serial oracle on frames
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("workers,two_phase", [(1, False), (1, True), (4, None)])
+def test_engine_decode_bit_identical(engine, workers, two_phase):
+    de = LZ4DecodeEngine(workers=workers, two_phase=two_phase)
+    for name, data in _frame_corpus(engine).items():
+        frame = engine.compress(data)
+        got = de.decode(frame)
+        assert got == data, name
+        assert got == decode_frame_serial(frame), name
+        assert got == decode_frame_serial(frame, bytewise=True), name
+    de.close()
+
+
+def test_planner_fast_equals_reference(engine):
+    # The vectorized planner must produce byte-identical plans to the
+    # serial-parse reference on every compressible corpus block.
+    from repro.core import frame_info, plan_block_fast
+
+    for name, data in _frame_corpus(engine).items():
+        frame = engine.compress(data)
+        info = frame_info(frame)
+        for b in info["blocks"]:
+            if b["raw"]:
+                continue
+            payload = frame[b["offset"]: b["offset"] + b["csize"]]
+            ref, fast = plan_block(payload), plan_block_fast(payload)
+            assert ref.usize == fast.usize, name
+            for f in ("lit_src", "lit_dst", "lit_len",
+                      "match_dst", "match_src", "match_len"):
+                assert np.array_equal(getattr(ref, f), getattr(fast, f)), (name, f)
+
+
+def test_planner_fast_rejects_what_reference_rejects():
+    # Malformed-block parity: on mutated payloads both planners must agree
+    # on accept/reject (and on the resulting plan when both accept).
+    from repro.core import plan_block_fast
+
+    rng = _rng()
+    base = _encode_oracle(b"planner parity " * 800)
+    for trial in range(300):
+        mutant = bytearray(base)
+        pos = int(rng.integers(0, len(base)))
+        mutant[pos] = int(rng.integers(0, 256))
+        mutant = bytes(mutant)
+        try:
+            ref = plan_block(mutant)
+            ref_err = None
+        except LZ4FormatError as e:
+            ref, ref_err = None, str(e)
+        try:
+            fast = plan_block_fast(mutant)
+            fast_err = None
+        except LZ4FormatError as e:
+            fast, fast_err = None, str(e)
+        assert (ref is None) == (fast is None), (trial, pos, ref_err, fast_err)
+        if ref is not None:
+            assert ref.usize == fast.usize, (trial, pos)
+        else:
+            assert ref_err == fast_err, (trial, pos)
+        # And with a cap, exercising the pre-copy limit checks.
+        try:
+            ref_c = plan_block(mutant, max_out=1000)
+            ref_c_err = None
+        except LZ4FormatError as e:
+            ref_c, ref_c_err = None, str(e)
+        try:
+            fast_c = plan_block_fast(mutant, max_out=1000)
+            fast_c_err = None
+        except LZ4FormatError as e:
+            fast_c, fast_c_err = None, str(e)
+        assert (ref_c is None) == (fast_c is None), (trial, pos)
+        if ref_c is None:
+            assert ref_c_err == fast_c_err, (trial, pos)
+
+
+@pytest.mark.parametrize("executor", ["thread", "process"])
+def test_engine_executors_bit_identical(engine, executor):
+    if executor == "process":
+        import multiprocessing as mp
+
+        if "fork" not in mp.get_all_start_methods():
+            pytest.skip("fork start method unavailable")
+    data = b"executor parity " * 30000  # multi-block
+    frame = engine.compress(data)
+    with LZ4DecodeEngine(workers=2, executor=executor) as de:
+        assert de.decode(frame) == data
+        assert de.stats.parallel
+        # Corruption must also surface identically through the pool.
+        mutant = bytearray(frame)
+        mutant[-3] ^= 0x20
+        with pytest.raises(FrameFormatError):
+            de.decode(bytes(mutant))
+
+
+def test_engine_decode_parallel_stats(engine):
+    data = b"stats check " * 30000  # 6 blocks
+    frame = engine.compress(data)
+    de = LZ4DecodeEngine(workers=4)
+    assert de.decode(frame) == data
+    assert de.stats.blocks == 6
+    assert de.stats.bytes_out == len(data)
+    assert de.stats.parallel
+    de.close()
+
+
+def test_engine_decode_blocks_mixed_raw():
+    rng = _rng()
+    chunks = [b"ham and jam " * 700, rng.integers(0, 256, 5000, np.uint8).tobytes()]
+    payloads = [_encode_oracle(chunks[0]), chunks[1]]
+    de = LZ4DecodeEngine(workers=2)
+    out = de.decode_blocks(payloads, raws=[False, True],
+                           usizes=[len(chunks[0]), len(chunks[1])])
+    assert out == chunks
+    with pytest.raises(LZ4FormatError):
+        de.decode_blocks([payloads[0]], raws=[False], usizes=[len(chunks[0]) - 1])
+    de.close()
+
+
+def test_decode_frame_delegates_to_engine(engine, monkeypatch):
+    from repro.core import decode_engine as de_mod
+
+    calls = []
+    orig = de_mod.LZ4DecodeEngine.decode
+
+    def spy(self, frame):
+        calls.append(len(frame))
+        return orig(self, frame)
+
+    monkeypatch.setattr(de_mod.LZ4DecodeEngine, "decode", spy)
+    data = b"delegation " * 1000
+    frame = engine.compress(data)
+    assert decode_frame(frame) == data
+    assert calls == [len(frame)]
+
+
+# ---------------------------------------------------------------------------
+# FrameReader random access
+# ---------------------------------------------------------------------------
+
+def test_read_range_randomized(engine):
+    rng = _rng()
+    for name, data in _frame_corpus(engine).items():
+        if not data:
+            continue
+        reader = FrameReader(engine.compress(data))
+        assert len(reader) == len(data)
+        for _ in range(40):
+            start = int(rng.integers(0, len(data)))
+            length = int(rng.integers(0, len(data) - start + 1))
+            assert reader.read_range(start, length) == data[start:start + length], \
+                (name, start, length)
+
+
+def test_read_range_boundaries(engine):
+    data = b"edge case " * 20000  # ~200 KB, 4 blocks
+    frame = engine.compress(data)
+    reader = FrameReader(frame)
+    n = len(data)
+    for start, length in [(0, 0), (0, 1), (0, n), (n, 0), (n - 1, 1),
+                          (MAX_BLOCK - 1, 2), (MAX_BLOCK, 1),
+                          (MAX_BLOCK - 1, MAX_BLOCK + 2),
+                          (2 * MAX_BLOCK - 5, 10)]:
+        assert reader.read_range(start, length) == data[start:start + length], \
+            (start, length)
+    for start, length in [(-1, 5), (0, n + 1), (n, 1), (5, -1)]:
+        with pytest.raises(ValueError):
+            reader.read_range(start, length)
+
+
+def test_read_range_decodes_only_covering_blocks(engine, monkeypatch):
+    data = b"only the needed blocks " * 12000  # ~276 KB -> 5 blocks
+    frame = engine.compress(data)
+    reader = FrameReader(frame, cache_blocks=0,
+                         engine=LZ4DecodeEngine(two_phase=True))
+    from repro.core import decode_plan as dp_mod
+
+    planned = []
+    orig = dp_mod.plan_block_fast
+
+    def spy(block, max_out=None):
+        planned.append(len(block))
+        return orig(block, max_out=max_out)
+
+    monkeypatch.setattr("repro.core.decode_engine.plan_block_fast", spy)
+    # A range inside block 1 must plan exactly one block.
+    reader.read_range(MAX_BLOCK + 100, 500)
+    assert len(planned) == 1
+    planned.clear()
+    # A range straddling blocks 1-2 must plan exactly two.
+    reader.read_range(2 * MAX_BLOCK - 50, 100)
+    assert len(planned) == 2
+    # With the LRU on, a repeated clustered read decodes nothing, and a
+    # shifted overlapping read decodes only the one missing block.
+    cached = FrameReader(frame, cache_blocks=4,
+                         engine=LZ4DecodeEngine(two_phase=True))
+    planned.clear()
+    assert cached.read_range(2 * MAX_BLOCK - 50, 100) == \
+        data[2 * MAX_BLOCK - 50: 2 * MAX_BLOCK + 50]
+    assert len(planned) == 2
+    planned.clear()
+    cached.read_range(2 * MAX_BLOCK - 50, 100)
+    assert len(planned) == 0  # both covering blocks reused from the LRU
+    cached.read_range(3 * MAX_BLOCK - 50, 100)  # blocks 2 (cached) + 3
+    assert len(planned) == 1
+
+
+def test_read_block_and_cache(engine):
+    data = b"cached block reads " * 15000
+    frame = engine.compress(data)
+    reader = FrameReader(frame, cache_blocks=2)
+    for i in range(reader.block_count):
+        a, b = reader.block_range(i)
+        blk = reader.read_block(i)
+        assert blk == data[a:b]
+        assert reader.read_block(i) == blk  # cached hit
+    with pytest.raises(IndexError):
+        reader.read_block(reader.block_count)
+    with pytest.raises(IndexError):
+        reader.read_block(-1)
+
+
+def test_reader_usize_without_decode(engine):
+    data = b"\x00" * (3 * MAX_BLOCK + 99)
+    reader = FrameReader(engine.compress(data))
+    assert reader.usize == len(data)
+    assert reader.blocks_for_range(0, len(data)) == range(0, 4)
+    assert list(reader.blocks_for_range(MAX_BLOCK, 1)) == [1]
+
+
+# ---------------------------------------------------------------------------
+# Checksummed frames (v2) detect corruption
+# ---------------------------------------------------------------------------
+
+def test_v2_checksum_detects_payload_corruption(engine):
+    data = b"integrity matters " * 9000
+    frame = bytearray(engine.compress(data))
+    # Flip one bit deep in the last payload (valid token stream bytes may
+    # still parse — only the checksum can catch this class of corruption).
+    frame[-7] ^= 0x40
+    for fn in (decode_frame, decode_frame_serial):
+        with pytest.raises(FrameFormatError):
+            fn(bytes(frame))
+
+
+def test_v1_frames_still_decode():
+    payload = b"legacy bytes"
+    frame = encode_frame([payload], [len(payload)], [True])
+    assert frame[4] == 1  # version byte
+    assert decode_frame(frame) == payload
+    assert decode_frame_serial(frame) == payload
+    assert FrameReader(frame).read_range(2, 5) == payload[2:7]
+
+
+def test_v2_raw_block_checksummed():
+    from repro.core import block_crc
+
+    payload = b"raw but protected"
+    frame = bytearray(encode_frame([payload], [len(payload)], [True],
+                                   checksums=[block_crc(payload)]))
+    assert frame[4] == 2
+    assert decode_frame(bytes(frame)) == payload
+    frame[-1] ^= 0x01
+    with pytest.raises(FrameFormatError, match="checksum"):
+        decode_frame(bytes(frame))

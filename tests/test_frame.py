@@ -127,8 +127,9 @@ def test_frame_incompressible_uses_passthrough(engine):
     frame = engine.compress(data)
     info = frame_info(frame)
     assert [b["raw"] for b in info["blocks"]] == [True]
-    # Passthrough bounds expansion to the frame header + table.
-    assert len(frame) == len(data) + 9 + 8
+    # Passthrough bounds expansion to the frame header + table (v2 entries
+    # are 12 bytes: usize, csize/flag, content crc32).
+    assert len(frame) == len(data) + 9 + 12
     assert decode_frame(frame) == data
 
 
