@@ -1,13 +1,25 @@
 """Batched LZ4Engine throughput vs the serial per-block baseline.
 
-Measures blocks/s of `LZ4Engine.compress` (one dispatch per micro-batch,
-vectorized emission, frame output) over micro-batch sizes {1, 8, 32, 128}
-against the deprecated serial path (`compress_bytes`: one dispatch per 64 KB
-block + Python byte-loop emission) on the same corpus and kernel config.
+Measures blocks/s of `LZ4Engine.compress` over micro-batch sizes
+{1, 8, 32, 128} for BOTH emission paths — ``device_emit=True`` (byte
+emission inside the jit graph, one padded uint8 buffer + size scalar
+crossing the host boundary per block) and ``device_emit=False`` (per-window
+match records fetched to host, vectorized NumPy emission) — against the
+pre-refactor serial path (one dispatch per 64 KB block + Python byte-loop
+emission) on the same corpus and kernel config.
+
+Also records, per path:
+  * host-transfer bytes (`EngineStats.host_bytes`): the device-emit path
+    must move fewer bytes across the host boundary than the records path —
+    this is the acceptance metric for device-side emission;
+  * emit-stage throughput: the host emitter timed alone on pre-fetched
+    records, vs the device path's fused emit (reported as the marginal
+    pipeline cost, since in-graph emission cannot be timed separately).
 
 JSON lands in experiments/benchmarks/engine_batched.json and is mirrored to
 BENCH_engine_batched.json at the repo root so the perf trajectory is easy to
-diff across PRs.
+diff across PRs.  Methodology notes + measured tables: EXPERIMENTS.md;
+parameter guidance distilled from these numbers: docs/tuning.md.
 """
 from __future__ import annotations
 
@@ -47,7 +59,7 @@ def run(fast: bool = True) -> dict:
     repeat = 1 if fast else 2
     data = _corpus(n_blocks)
 
-    out = {"corpus_blocks": n_blocks, "block_kb": 64, "batch": {}}
+    out = {"corpus_blocks": n_blocks, "block_kb": 64}
 
     # Serial baseline: the pre-refactor compress_bytes path — one jit
     # dispatch per 64 KB block, then Python byte loops for emission.
@@ -75,17 +87,69 @@ def run(fast: bool = True) -> dict:
     out["serial_blocks_per_s"] = round(n_blocks / dt, 2)
     out["serial_mbps"] = round(len(data) / dt / 1e6, 2)
 
-    for b in sizes:
-        eng = LZ4Engine(micro_batch=b)
-        frame = eng.compress(data)
-        assert decode_frame(frame) == data, "engine round-trip failed"
-        dt = _timed(lambda: eng.compress(data), repeat)
-        out["batch"][str(b)] = {
-            "blocks_per_s": round(n_blocks / dt, 2),
-            "mbps": round(len(data) / dt / 1e6, 2),
-            "dispatches": eng.stats.dispatches,
-        }
-    best = max(v["blocks_per_s"] for v in out["batch"].values())
+    # Both engine emission paths over the micro-batch sweep.  "batch" keeps
+    # its historical meaning (records + host emit) so the column stays
+    # diffable against older BENCH_engine_batched.json baselines.
+    ref_frame = None
+    for key, device_emit in (("batch", False), ("device_emit", True)):
+        out[key] = {}
+        for b in sizes:
+            eng = LZ4Engine(micro_batch=b, device_emit=device_emit)
+            frame = eng.compress(data)
+            assert decode_frame(frame) == data, "engine round-trip failed"
+            if ref_frame is None:
+                ref_frame = frame
+            assert frame == ref_frame, "emission paths disagree on frame bytes"
+            dt = _timed(lambda: eng.compress(data), repeat)
+            out[key][str(b)] = {
+                "blocks_per_s": round(n_blocks / dt, 2),
+                "mbps": round(len(data) / dt / 1e6, 2),
+                "dispatches": eng.stats.dispatches,
+                "host_bytes": eng.stats.host_bytes,
+            }
+
+    # Host-transfer accounting (acceptance metric for device-side emission):
+    # bytes fetched device -> host for one full-corpus compress at the
+    # default micro-batch.  The records path moves four (W,) arrays per
+    # block; the device path one padded uint8 buffer + size scalar.
+    mb = str(min(32, max(sizes)))
+    records_bytes = out["batch"][mb]["host_bytes"]
+    device_bytes = out["device_emit"][mb]["host_bytes"]
+    out["host_transfer"] = {
+        "micro_batch": int(mb),
+        "records_path_bytes": records_bytes,
+        "device_emit_bytes": device_bytes,
+        "reduction_x": round(records_bytes / device_bytes, 3),
+    }
+
+    # Emit-stage throughput.  The host emitter can be timed in isolation
+    # (records pre-fetched); the device emitter is fused into the dispatch,
+    # so its cost shows up as the pipeline delta between the two paths.
+    import numpy as np
+
+    recs = []
+    for i in range(0, len(data), MAX_BLOCK):
+        chunk = data[i: i + MAX_BLOCK]
+        buf, n = pad_block(chunk)
+        rec = compress_block_records(jnp.asarray(buf), jnp.int32(n))
+        recs.append((chunk, np.asarray(rec.emit), np.asarray(rec.pos),
+                     np.asarray(rec.length), np.asarray(rec.offset), n))
+
+    from repro.core.emitter import emit_block
+
+    def host_emit_all():
+        return [emit_block(c, e, p, l, o, n) for c, e, p, l, o, n in recs]
+
+    dt = _timed(host_emit_all, repeat)
+    out["emit_throughput"] = {
+        "host_emit_blocks_per_s": round(n_blocks / dt, 2),
+        "host_emit_mbps": round(len(data) / dt / 1e6, 2),
+        "device_pipeline_mbps": out["device_emit"][mb]["mbps"],
+        "records_pipeline_mbps": out["batch"][mb]["mbps"],
+    }
+
+    best = max(v["blocks_per_s"]
+               for key in ("batch", "device_emit") for v in out[key].values())
     out["speedup_best_vs_serial"] = round(best / out["serial_blocks_per_s"], 3)
     save_json("engine_batched", out)
     root = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine_batched.json")

@@ -1,15 +1,27 @@
 """Core LZ4 compression library — the paper's contribution.
 
+The primary APIs are the two engines (`LZ4Engine` in, `LZ4DecodeEngine`
+out); everything else is a building block or a bit-identity oracle for one
+of their stages.  docs/architecture.md maps each stage to the paper's
+hardware pipeline and to these modules.
+
 Public API:
-    LZ4Engine            — batched device-resident pipeline (frame in/out)
+    LZ4Engine            — batched compression pipeline (frame in/out); with
+                           ``device_emit=True`` (default) byte emission stays
+                           in the jit graph and only final frame bytes cross
+                           the host boundary
     LZ4DecodeEngine      — parallel two-phase (plan/execute) frame decoder
     FrameReader          — seekable random access over a frame's block table
+    default_engine       — process-wide shared LZ4Engine
     compress_greedy      — software baseline (GitHub-like, multi-match, unbounded)
     compress_windowed    — the paper's single-match / bounded scheme (golden model)
     encode_block / decode_block — exact LZ4 block format round trip
     plan_block / execute_plan   — two-phase block decode building blocks
-    emit_block           — vectorized (prefix-sum) block emission
+    emit_block           — host-side vectorized (prefix-sum) block emission:
+                           the engine's ``device_emit=False`` path and the
+                           oracle for the device emitter
     encode_frame / decode_frame — self-describing multi-block container
+                           (byte-level spec: docs/frame-format.md)
     decode_frame_serial  — serial block-walk oracle for the decode engine
 """
 from .lz4_types import (  # noqa: F401
@@ -46,5 +58,5 @@ from .decode_engine import (  # noqa: F401
     LZ4DecodeEngine,
     default_decode_engine,
 )
-from .engine import LZ4Engine  # noqa: F401
+from .engine import EngineStats, LZ4Engine, default_engine  # noqa: F401
 from .corpus import corpus_blocks, corpus_files  # noqa: F401

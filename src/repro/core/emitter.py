@@ -1,18 +1,22 @@
-"""Vectorized LZ4 block emission: per-window match records -> bytes.
+"""Vectorized HOST-side LZ4 block emission: per-window match records -> bytes.
 
-`encode_block` walks the sequence plan with Python loops — one iteration per
-sequence plus one per length-extension byte.  On a compressible 64 KB block
-that is thousands of interpreter iterations and dominates the host-side cost
-of the pipeline (~55 ms/block vs ~80 ms of device compute on CPU).
+This is the engine's ``device_emit=False`` path and the bit-identity ORACLE
+for the device-resident emitter (`kernels.ops.emit_bytes`, the engine's
+default), which computes the same bytes inside the jit graph so they never
+round-trip through host NumPy at all (docs/architecture.md §write path).
 
-This module computes the same bytes with NumPy prefix sums, GPULZ-style
+Historically this module replaced `encode_block`'s Python loops — one
+iteration per sequence plus one per length-extension byte, ~55 ms per
+compressible 64 KB block — with NumPy prefix sums, GPULZ-style
 (arXiv 2304.07342): the byte offset of every token, literal run, offset field
 and extension-byte run is a cumulative sum over per-sequence sizes, so the
-whole block materializes with a handful of fancy-indexed assignments.
+whole block materializes with a handful of fancy-indexed assignments (~3 ms).
 
-`emit_block` is bit-identical to ``encode_block(data, records_to_plan(rec, n))``
-for every valid record set; ``encode_block`` is kept as the oracle and
-tests/test_frame.py asserts equality on the property corpus.
+The oracle chain is therefore:  `encode_block` (Python loops, most obviously
+correct)  ==  `emit_block` (this module)  ==  device emit (in-graph).
+tests/test_frame.py asserts the first equality on the property corpus;
+tests/test_device_emit.py asserts the second, plus the engine-level frame
+equality of ``device_emit=True|False``.
 """
 from __future__ import annotations
 

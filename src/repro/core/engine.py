@@ -1,25 +1,38 @@
 """Batched, device-resident compression pipeline: the `LZ4Engine`.
 
-`compress_bytes` (the original entry point, now a deprecated wrapper)
-reintroduced exactly the serial feedback loop the paper removes from the
-hardware: one jit dispatch per 64 KB block, then three Python byte loops to
-emit the output.  The engine restores the batch-parallel shape:
+The engine is the primary write-path API (`compress_bytes`, the original
+entry point, survives only as a deprecated wrapper).  It keeps the paper's
+feedback-free token pipeline batch-parallel end to end:
 
   * arbitrary-length input is split into a ``(B, MAX_BLOCK + _PAD)`` uint8
     stack and compressed with ONE vmapped+jitted dispatch per micro-batch
     (configurable ``micro_batch``, donated input buffers);
   * dispatch is double-buffered: while the device crunches micro-batch i,
-    the host pads and dispatches micro-batch i+1, so padding/transfer
-    overlaps device compute;
-  * byte emission uses the vectorized prefix-sum emitter (emitter.py)
-    instead of per-sequence Python loops;
-  * output is a self-describing frame (frame.py) with per-block sizes and a
+    the host pads and dispatches micro-batch i+1, so padding/transfer —
+    and, with ``device_emit``, the host-side frame assembly of the previous
+    micro-batch — overlaps device compute;
+  * byte emission is device-resident by default (``device_emit=True``): the
+    jit graph computes token byte-lengths, exclusive prefix-sum offsets,
+    and the byte scatter (`jax_compressor.compress_block_bytes` ->
+    `kernels.ops.emit_bytes`), so only final frame bytes cross the host
+    boundary, once per micro-batch.  ``device_emit=False`` fetches the
+    per-window match records instead and emits on host with the vectorized
+    prefix-sum emitter (emitter.py) — the bit-identity oracle path;
+  * output is a self-describing frame (frame.py, spec in
+    docs/frame-format.md) with per-block sizes, CRC32s, and a
     raw-passthrough flag for uncompressible blocks, decodable by
     `decode_frame` with no out-of-band metadata.
+
+`EngineStats.host_bytes` counts every byte fetched from the device, so the
+host-transfer saving of ``device_emit`` is directly observable
+(benchmarks/engine_batched.py records it; trade-offs in docs/tuning.md).
 
 Partial trailing micro-batches are padded up to the next power of two (capped
 at ``micro_batch``) so the number of compiled shapes is bounded by
 log2(micro_batch) + 1 rather than one per input length.
+
+See docs/architecture.md for the stage-by-stage map of the write path onto
+the paper's hardware pipeline.
 """
 from __future__ import annotations
 
@@ -32,7 +45,11 @@ import numpy as np
 
 from .emitter import emit_block
 from .frame import block_crc, decode_frame, encode_frame
-from .jax_compressor import _PAD, compress_block_records
+from .jax_compressor import (
+    _PAD,
+    compress_block_bytes,
+    compress_block_records,
+)
 from .lz4_types import (
     DEFAULT_HASH_BITS,
     DEFAULT_MAX_MATCH,
@@ -51,14 +68,17 @@ def default_engine() -> "LZ4Engine":
 
 @functools.lru_cache(maxsize=None)
 def _batched_compiled(hash_bits, max_match, pws, use_pallas, scan_impl,
-                      candidate_impl, donate):
+                      candidate_impl, donate, device_emit):
     """Jitted vmap of the single-block kernel, cached per static config.
 
     Module-level cache so every LZ4Engine instance (and the compress_bytes
     wrapper) shares compilations; jit's own cache then keys on batch shape.
+    ``device_emit`` selects the fused compress+emit graph (bytes out) over
+    the records-only graph (match records out, emitted on host).
     """
+    base = compress_block_bytes if device_emit else compress_block_records
     fn = functools.partial(
-        compress_block_records,
+        base,
         hash_bits=hash_bits, max_match=max_match, pws=pws,
         use_pallas=use_pallas, scan_impl=scan_impl,
         candidate_impl=candidate_impl,
@@ -76,6 +96,12 @@ class EngineStats:
     raw_blocks: int = 0
     bytes_in: int = 0
     bytes_out: int = 0
+    host_bytes: int = 0  # bytes fetched device -> host (records or emit buffers)
+
+
+def _slice_payload(out: np.ndarray, j: int, size: int) -> bytes:
+    """Row j's first `size` bytes of a drained (M, out_cap) emit buffer."""
+    return out[j, :size].tobytes()
 
 
 class LZ4Engine:
@@ -93,7 +119,8 @@ class LZ4Engine:
                  use_pallas: bool = False,
                  scan_impl: str = "sequential",
                  candidate_impl: str = "sort",
-                 donate: bool | None = None):
+                 donate: bool | None = None,
+                 device_emit: bool = True):
         if micro_batch < 1:
             raise ValueError("micro_batch must be >= 1")
         self.hash_bits = hash_bits
@@ -105,6 +132,10 @@ class LZ4Engine:
         self.candidate_impl = candidate_impl
         # Donation only pays (and only avoids a warning) off-CPU.
         self.donate = (jax.default_backend() != "cpu") if donate is None else donate
+        # device_emit=True: byte emission stays in the jit graph; only the
+        # final bytes cross the host boundary.  False: fetch match records
+        # and emit on host via emit_block (the bit-identity oracle path).
+        self.device_emit = device_emit
         self.stats = EngineStats()
 
     # -- dispatch -----------------------------------------------------------
@@ -114,6 +145,7 @@ class LZ4Engine:
         fn = _batched_compiled(
             self.hash_bits, self.max_match, self.pws, self.use_pallas,
             self.scan_impl, self.candidate_impl, self.donate,
+            self.device_emit,
         )
         self.stats.dispatches += 1
         return fn(jnp.asarray(stack), jnp.asarray(ns))
@@ -131,12 +163,15 @@ class LZ4Engine:
             ns[j] = len(c)
         return stack, ns
 
-    def _records_iter(self, data: bytes):
-        """Yield (chunk, n, emit, pos, length, offset, size) per block.
+    def _payload_iter(self, data: bytes):
+        """Yield (chunk, n, size, payload_fn) per block.
 
+        `payload_fn()` materializes the compressed block bytes: a buffer
+        slice on the device-emit path, a host `emit_block` call otherwise.
         Double-buffered: micro-batch i+1 is padded and dispatched before the
-        host blocks on micro-batch i's results, so host-side padding overlaps
-        device compute (jax dispatch is asynchronous).
+        host blocks on micro-batch i's results, so host-side padding (and
+        frame assembly) overlaps device compute (jax dispatch is
+        asynchronous).
         """
         chunks = [data[i: i + MAX_BLOCK] for i in range(0, len(data), MAX_BLOCK)]
         self.stats = EngineStats(blocks=len(chunks), bytes_in=len(data))
@@ -144,38 +179,49 @@ class LZ4Engine:
         for start in range(0, len(chunks), self.micro_batch):
             batch = chunks[start: start + self.micro_batch]
             stack, ns = self._pad_batch(batch)
-            rec = self._dispatch(stack, ns)
+            res = self._dispatch(stack, ns)
             if inflight is not None:
                 yield from self._drain(*inflight)
-            inflight = (batch, rec)
+            inflight = (batch, res)
         if inflight is not None:
             yield from self._drain(*inflight)
 
-    @staticmethod
-    def _drain(batch: list[bytes], rec):
-        emit, pos, length, offset, size = jax.device_get(
-            (rec.emit, rec.pos, rec.length, rec.offset, rec.size)
-        )
-        for j, chunk in enumerate(batch):
-            yield chunk, len(chunk), emit[j], pos[j], length[j], offset[j], int(size[j])
+    def _drain(self, batch: list[bytes], res):
+        if self.device_emit:
+            out, size = jax.device_get(res)
+            self.stats.host_bytes += out.nbytes + size.nbytes
+            for j, chunk in enumerate(batch):
+                s = int(size[j])
+                yield chunk, len(chunk), s, functools.partial(_slice_payload, out, j, s)
+        else:
+            emit, pos, length, offset, size = jax.device_get(
+                (res.emit, res.pos, res.length, res.offset, res.size)
+            )
+            self.stats.host_bytes += (emit.nbytes + pos.nbytes + length.nbytes
+                                      + offset.nbytes + size.nbytes)
+            for j, chunk in enumerate(batch):
+                yield chunk, len(chunk), int(size[j]), functools.partial(
+                    emit_block, chunk, emit[j], pos[j], length[j], offset[j],
+                    len(chunk),
+                )
 
     # -- public API ---------------------------------------------------------
 
     def compress(self, data: bytes) -> bytes:
-        """bytes -> self-describing frame (see frame.py).
+        """bytes -> self-describing frame (see frame.py / docs/frame-format.md).
 
         Blocks whose exact compressed size (computed in-graph) does not beat
         the raw size are stored as raw passthrough, so worst-case expansion
         is the frame header, not LZ4's literal-run overhead.
         """
         payloads, usizes, raws, crcs = [], [], [], []
-        for chunk, n, emit, pos, length, offset, size in self._records_iter(data):
+        for chunk, n, size, payload_fn in self._payload_iter(data):
             if size >= n:
                 payloads.append(chunk)
                 raws.append(True)
                 self.stats.raw_blocks += 1
             else:
-                payloads.append(emit_block(chunk, emit, pos, length, offset, n))
+                payloads.append(payload_fn())
                 raws.append(False)
             usizes.append(n)
             # Content checksum over the ORIGINAL chunk (only the compressor
@@ -195,10 +241,7 @@ class LZ4Engine:
         if not data:
             self.stats = EngineStats(blocks=1)  # host-emitted empty block
             return [emit_block(b"", [], [], [], [], 0)]
-        return [
-            emit_block(chunk, emit, pos, length, offset, n)
-            for chunk, n, emit, pos, length, offset, _ in self._records_iter(data)
-        ]
+        return [payload_fn() for _, _, _, payload_fn in self._payload_iter(data)]
 
     def decompress(self, frame: bytes) -> bytes:
         """Inverse of `compress`; validates the frame (sizes + checksums)

@@ -1,5 +1,9 @@
 """Self-describing multi-block container (LZ4-frame-style) with a seek index.
 
+The normative byte-level specification of this format — complete enough for
+a third party to implement an independent reader — lives in
+docs/frame-format.md; this docstring is the working summary.
+
 The raw block format needs out-of-band lengths: a list of compressed blocks
 is not decodable without knowing where each block ends and how large it was
 uncompressed.  This container makes `LZ4Engine.compress` output a single

@@ -18,11 +18,15 @@ This is the TPU-native re-expression of the hardware architecture in Fig. 5:
           * an associative scan over per-window transfer tables of size
             R = max_match (beyond-paper optimization: O(log W) depth).
   Sequence Encoding              -> exact compressed size computed in-graph;
-        byte emission happens at the storage boundary (encoder.py).
+        byte emission ALSO stays in-graph on the default engine path
+        (`compress_block_bytes` -> kernels.ops.emit_bytes: prefix-sum
+        offsets + byte scatter on device, only final bytes cross the host
+        boundary).  The host-side emitters (emitter.py vectorized,
+        encoder.py loop-based) survive as the bit-identity oracles.
 
 All variants are bit-identical to the numpy golden model (schemes.py) and to
 each other; tests/test_lz4_jax.py asserts exact equality of the per-window
-match records.
+match records, tests/test_device_emit.py the emitted bytes.
 """
 from __future__ import annotations
 
@@ -46,6 +50,12 @@ from .lz4_types import (
 )
 
 _PAD = 71  # block padding: max max_match (68) + 3 word-shift bytes
+
+# Device-emit output buffer size per block.  The worst case compressed block
+# is literals-only: 1 token + 257 extension bytes + MAX_BLOCK literals =
+# MAX_BLOCK + 258; padded up to a lane-aligned multiple of the emit kernel's
+# tile (2048) so the Pallas path needs no re-padding.
+OUT_CAP = MAX_BLOCK + 2048
 
 
 @jax.tree_util.register_dataclass
@@ -300,6 +310,53 @@ def compress_block_records(
         offset=jnp.where(emit, offset, 0),
         size=size,
     )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "hash_bits", "max_match", "pws", "use_pallas", "scan_impl",
+        "candidate_impl", "out_cap",
+    ),
+)
+def compress_block_bytes(
+    block_u8,
+    n,
+    hash_bits: int = DEFAULT_HASH_BITS,
+    max_match: int = DEFAULT_MAX_MATCH,
+    pws: int = DEFAULT_PWS,
+    use_pallas: bool = False,
+    scan_impl: str = "sequential",
+    candidate_impl: str = "sort",
+    out_cap: int = OUT_CAP,
+):
+    """Compress one padded block to FINAL BYTES, entirely in-graph.
+
+    The device-resident emit path (docs/architecture.md §write path): the
+    match-record pipeline of `compress_block_records` feeds straight into
+    `kernels.ops.emit_bytes` — token byte-lengths, exclusive prefix-sum
+    offsets, and the byte scatter all stay on the accelerator, so the ONLY
+    host transfer per block is the (out_cap,) uint8 output buffer plus a
+    size scalar (vs four (W,) record arrays for the host-emit path).
+
+    Returns ``(out, size)``: out is (out_cap,) uint8, ``out[:size]`` is the
+    compressed block, bit-identical to the host oracle
+    ``emitter.emit_block(...)`` on the same records.
+    """
+    rec = compress_block_records(
+        block_u8, n,
+        hash_bits=hash_bits, max_match=max_match, pws=pws,
+        use_pallas=use_pallas, scan_impl=scan_impl,
+        candidate_impl=candidate_impl,
+    )
+    block = block_u8.astype(jnp.int32)
+    idx = jnp.arange(block.shape[0], dtype=jnp.int32)
+    block = jnp.where(idx < n, block, 0)
+    out, total = ops.emit_bytes(
+        block, rec.emit, rec.pos, rec.length, rec.offset, n,
+        out_cap=out_cap, use_pallas=use_pallas,
+    )
+    return out, total
 
 
 # Batched form for throughput: vmap over a stack of blocks.

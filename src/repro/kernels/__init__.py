@@ -1,4 +1,8 @@
-"""Pallas TPU kernels for the paper's compute hot-spots (hash + extended match).
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Kernels: fibhash.py (word build + Fibonacci hash), match_extend.py (bounded
+S2 match extension), emit_scatter.py (device-side byte emission — the write
+path's last stage, so compressed bytes never round-trip through host NumPy).
 
 Layout per kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 dispatch wrappers), ref.py (pure-jnp oracles).  Validated with interpret=True

@@ -11,7 +11,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.lz4_types import MIN_MATCH
+
 from . import ref
+from .emit_scatter import TILE as EMIT_TILE
+from .emit_scatter import emit_scatter_pallas
 from .fibhash import TILE as HASH_TILE
 from .fibhash import fibhash_pallas
 from .match_extend import TILE as EXT_TILE
@@ -64,3 +68,97 @@ def match_lengths(block_i32, cand, valid, n, max_match: int = 36, use_pallas: bo
         )
         return out[:P]
     return ref.match_extend_ref(block_i32, cand, valid, n, max_match)
+
+
+def _ext_len(v):
+    """Extension byte count for a token-nibble value (literal count or
+    match_len - MIN_MATCH): 0 below 15, else 1 + (v - 15) // 255."""
+    return jnp.where(v < 15, 0, 1 + (v - 15) // 255)
+
+
+def _emit_layout(emit, pos, length, offset, n, out_cap: int):
+    """Per-sequence output layout + covering-sequence map, all in-graph.
+
+    The XLA half of device-side emission (shared by both `emit_bytes` paths):
+    log-depth prefix sums turn the per-window match records into exact byte
+    offsets — a cummax recovers each sequence's literal anchor (as in
+    `_plan_size`), a cumsum over per-sequence byte sizes places every token —
+    then one scatter of sequence ids at those starts plus a cummax over
+    output positions yields `seg`, the covering-sequence index of every
+    output byte.  The final literals-only sequence is appended as column W.
+
+    Returns (seg (out_cap,) int32, fields (ref.N_FIELDS, W+1) int32,
+    total () int32).
+    """
+    emit = emit.astype(bool)
+    pos = pos.astype(jnp.int32)
+    length = length.astype(jnp.int32)
+    offset = offset.astype(jnp.int32)
+    W = emit.shape[0]
+
+    end = jnp.where(emit, pos + length, 0)
+    run_end = jax.lax.cummax(end)
+    anchor = jnp.concatenate([jnp.zeros((1,), jnp.int32), run_end[:-1]])
+    lit = jnp.where(emit, pos - anchor, 0)
+    mlx = jnp.where(emit, length - MIN_MATCH, 0)
+    lit_ext = jnp.where(emit, _ext_len(lit), 0)
+    match_ext = jnp.where(emit, _ext_len(mlx), 0)
+    seq_size = jnp.where(emit, 3 + lit_ext + lit + match_ext, 0)
+    csum = jnp.cumsum(seq_size)
+    starts = csum - seq_size
+
+    final_start = csum[-1]
+    final_anchor = run_end[-1]
+    final_lit = n - final_anchor
+    final_ext = _ext_len(final_lit)
+    total = final_start + 1 + final_ext + final_lit
+
+    app = lambda a, v: jnp.concatenate([a.astype(jnp.int32),
+                                        jnp.asarray(v, jnp.int32)[None]])
+    fields = jnp.stack([
+        app(starts, final_start),            # F_START
+        app(anchor, final_anchor),           # F_ANCHOR
+        app(lit, final_lit),                 # F_LIT
+        app(lit_ext, final_ext),             # F_LIT_EXT
+        app(mlx, 0),                         # F_MLX
+        app(match_ext, 0),                   # F_MATCH_EXT
+        app(jnp.where(emit, offset, 0), 0),  # F_OFF
+        app(emit.astype(jnp.int32), 0),      # F_HAS_MATCH
+    ])
+
+    # seg[k] = index of the sequence covering output byte k: scatter each
+    # live sequence's id at its start (non-emitting windows have zero-size
+    # sequences — their starts collide with a neighbour's, so they are
+    # routed to a dropped out-of-range index), then a cummax forward-fills.
+    live = jnp.concatenate([emit, jnp.ones((1,), bool)])
+    sidx = jnp.where(live, fields[ref.F_START], out_cap)
+    smap = jnp.zeros((out_cap,), jnp.int32).at[sidx].max(
+        jnp.arange(W + 1, dtype=jnp.int32) + 1, mode="drop"
+    )
+    seg = jax.lax.cummax(smap) - 1
+    return seg, fields, total.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("out_cap", "use_pallas"))
+def emit_bytes(block_i32, emit, pos, length, offset, n, out_cap: int,
+               use_pallas: bool = False):
+    """Device-side LZ4 byte emission from per-window match records.
+
+    block_i32 : (B,) int32 input byte values, zeroed past `n`
+    emit/pos/length/offset : (W,) per-window match records (BlockRecords)
+    n         : scalar int32 true block length
+    out_cap   : static output buffer size; must exceed the worst-case
+                compressed size (literals-only: MAX_BLOCK + 257 + 1)
+
+    Returns ``(out, total)``: a (out_cap,) uint8 buffer whose first `total`
+    bytes are the compressed block (bit-identical to
+    `repro.core.emitter.emit_block`, the host oracle) and the exact size.
+    Layout (prefix sums + seg map) is XLA either way; `use_pallas` selects
+    the Pallas byte-materialization kernel over the jnp gather fallback.
+    """
+    seg, fields, total = _emit_layout(emit, pos, length, offset, n, out_cap)
+    if use_pallas:
+        segp = _pad_to(seg, EMIT_TILE, value=0)
+        out = emit_scatter_pallas(block_i32, segp, fields, total[None])
+        return out[:out_cap].astype(jnp.uint8), total
+    return ref.emit_bytes_ref(block_i32, seg, fields, total), total

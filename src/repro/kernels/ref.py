@@ -5,6 +5,19 @@ import jax.numpy as jnp
 
 from repro.core.lz4_types import HASH_PRIME, MIN_MATCH, LAST_LITERALS
 
+# Row layout of the per-sequence `fields` array consumed by the emit kernels
+# (`emit_bytes_ref` here, `emit_scatter.py` on the Pallas path).  One column
+# per sequence: the W per-window sequences plus the final literals-only one.
+F_START = 0       # output byte offset of the sequence's token
+F_ANCHOR = 1      # input offset of the sequence's first literal
+F_LIT = 2         # literal count
+F_LIT_EXT = 3     # literal-length extension byte count
+F_MLX = 4         # match length - MIN_MATCH (0 for the final sequence)
+F_MATCH_EXT = 5   # match-length extension byte count
+F_OFF = 6         # 16-bit match back-offset (0 for the final sequence)
+F_HAS_MATCH = 7   # 1 where the sequence carries a match, 0 for the final one
+N_FIELDS = 8
+
 
 def fibhash_ref(b0, b1, b2, b3, hash_bits: int):
     """Fibonacci hash of the little-endian 4-byte word at each position.
@@ -45,3 +58,54 @@ def match_extend_ref(block, cand, valid, n, max_match: int):
         prefix = prefix & (cur == cnd) & (j < max_extra)
         length = length + prefix.astype(jnp.int32)
     return jnp.where(valid, MIN_MATCH + length, 0)
+
+
+def emit_bytes_ref(block, seg, fields, total):
+    """LZ4 byte materialization: (output position -> byte) via gathers.
+
+    The inverse-scatter formulation of block emission: instead of scattering
+    each sequence's ragged pieces into the output (variable-length writes),
+    every output position k looks up its covering sequence `seg[k]` and
+    derives its byte from the relative offset r = k - start alone:
+
+        r == 0                         -> token
+        1 <= r <= lit_ext              -> literal-length extension byte
+        lit_ext < r <= lit_ext + lit   -> literal (one gather from the input)
+        r == 1 + lit_ext + lit         -> offset low byte
+        r == 2 + lit_ext + lit         -> offset high byte
+        r beyond                       -> match-length extension byte
+
+    block  : (B,) int32 byte values of the input block (zeroed past n)
+    seg    : (K,) int32 covering-sequence index per output position
+    fields : (N_FIELDS, S) int32 per-sequence layout (see F_* rows above)
+    total  : scalar int32 exact compressed size; positions >= total emit 0
+
+    Returns (K,) uint8.  Bit-identical to `repro.core.emitter.emit_block`
+    (asserted in tests/test_device_emit.py) — purely elementwise once the
+    per-sequence fields are gathered, which is what makes it a kernel shape.
+    """
+    K = seg.shape[0]
+    k = jnp.arange(K, dtype=jnp.int32)
+    st = jnp.take(fields[F_START], seg)
+    anc = jnp.take(fields[F_ANCHOR], seg)
+    lit = jnp.take(fields[F_LIT], seg)
+    le = jnp.take(fields[F_LIT_EXT], seg)
+    mlx = jnp.take(fields[F_MLX], seg)
+    me = jnp.take(fields[F_MATCH_EXT], seg)
+    off = jnp.take(fields[F_OFF], seg)
+    hm = jnp.take(fields[F_HAS_MATCH], seg)
+
+    r = k - st
+    token = (jnp.minimum(lit, 15) << 4) | jnp.where(hm > 0, jnp.minimum(mlx, 15), 0)
+    # Extension runs are (count-1) bytes of 255 followed by (value-15) % 255.
+    lit_ext_byte = jnp.where(r < le, 255, (lit - 15) % 255)
+    src = jnp.clip(anc + r - 1 - le, 0, block.shape[0] - 1)
+    lit_byte = jnp.take(block, src)
+    lit_end = 1 + le + lit
+    mext_byte = jnp.where(r - (lit_end + 2) < me - 1, 255, (mlx - 15) % 255)
+    b = jnp.where(r == 0, token,
+        jnp.where(r <= le, lit_ext_byte,
+        jnp.where(r <= le + lit, lit_byte,
+        jnp.where(r == lit_end, off & 0xFF,
+        jnp.where(r == lit_end + 1, (off >> 8) & 0xFF, mext_byte)))))
+    return jnp.where(k < total, b, 0).astype(jnp.uint8)

@@ -1,0 +1,150 @@
+#!/usr/bin/env python
+"""Docs link checker: fail CI on dangling cross-references.
+
+Checks, over every `docs/*.md` page:
+  * markdown links `[text](target)` — relative targets must exist
+    (resolved against the page's directory); `#anchor` fragments on
+    markdown targets must match a heading's GitHub-style slug;
+  * inline-code repo references — backtick spans that look like repo paths
+    (`src/repro/core/frame.py`, optionally with a `:LINE` anchor) must
+    exist, and the line anchor must not exceed the file's length (so code
+    moves that invalidate docs anchors fail the build);
+
+and, over every `src/**/*.py` and `tests/*.py`:
+  * any `docs/<page>.md` mentioned in source (the module-docstring
+    cross-links) must exist.
+
+Exit status 0 iff everything resolves. No dependencies beyond stdlib.
+
+Run:  python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DOCS = REPO / "docs"
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_SPAN = re.compile(r"`([^`]+)`")
+REPO_PATH = re.compile(
+    r"^(?P<path>\.?[\w./-]+\.(?:py|md|json|yml|yaml|toml|txt))(?::(?P<line>\d+))?$"
+)
+DOC_MENTION = re.compile(r"docs/[\w-]+\.md")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's markdown heading -> anchor slug (close enough for ASCII)."""
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def heading_slugs(md: pathlib.Path) -> set[str]:
+    slugs: set[str] = set()
+    in_fence = False
+    for line in md.read_text().splitlines():
+        if line.startswith("```"):
+            in_fence = not in_fence
+            continue
+        if not in_fence and line.startswith("#"):
+            slugs.add(github_slug(line.lstrip("#")))
+    return slugs
+
+
+def strip_fences(text: str) -> str:
+    """Drop fenced code blocks (their contents are examples, not refs)."""
+    out, in_fence = [], False
+    for line in text.splitlines():
+        if line.startswith("```"):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            out.append(line)
+    return "\n".join(out)
+
+
+def check_doc(md: pathlib.Path) -> list[str]:
+    errors: list[str] = []
+    text = strip_fences(md.read_text())
+
+    for m in MD_LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, frag = target.partition("#")
+        dest = (md.parent / path_part).resolve() if path_part else md
+        if not dest.exists():
+            errors.append(f"{md.relative_to(REPO)}: dangling link target {target!r}")
+            continue
+        if frag and dest.suffix == ".md":
+            if frag not in heading_slugs(dest):
+                errors.append(
+                    f"{md.relative_to(REPO)}: anchor #{frag} not found in "
+                    f"{dest.relative_to(REPO)}"
+                )
+
+    for m in CODE_SPAN.finditer(text):
+        ref = REPO_PATH.match(m.group(1).strip())
+        if not ref:
+            continue
+        dest = REPO / ref.group("path")
+        if not dest.exists():
+            errors.append(
+                f"{md.relative_to(REPO)}: referenced file {ref.group('path')!r} "
+                "does not exist"
+            )
+            continue
+        if ref.group("line"):
+            n_lines = len(dest.read_text().splitlines())
+            line = int(ref.group("line"))
+            if line > n_lines:
+                errors.append(
+                    f"{md.relative_to(REPO)}: {ref.group('path')}:{line} is past "
+                    f"end of file ({n_lines} lines) — stale line anchor"
+                )
+    return errors
+
+
+def check_source_mentions() -> list[str]:
+    errors: list[str] = []
+    for py in [*REPO.glob("src/**/*.py"), *REPO.glob("tests/*.py"),
+               *REPO.glob("benchmarks/*.py"), *REPO.glob("examples/*.py")]:
+        for mention in set(DOC_MENTION.findall(py.read_text())):
+            if not (REPO / mention).exists():
+                errors.append(
+                    f"{py.relative_to(REPO)}: mentions {mention} which does not exist"
+                )
+    return errors
+
+
+def main() -> int:
+    pages = sorted(DOCS.glob("*.md"))
+    if not pages:
+        print("FAIL: docs/ contains no markdown pages", file=sys.stderr)
+        return 1
+    required = {"architecture.md", "frame-format.md", "tuning.md"}
+    missing = required - {p.name for p in pages}
+    errors: list[str] = [f"docs/: required page {m} missing" for m in sorted(missing)]
+    for md in pages:
+        errors.extend(check_doc(md))
+    errors.extend(check_source_mentions())
+    if errors:
+        print(f"FAIL: {len(errors)} dangling docs reference(s):", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    n_refs = sum(
+        len(MD_LINK.findall(strip_fences(p.read_text())))
+        + len(CODE_SPAN.findall(strip_fences(p.read_text())))
+        for p in pages
+    )
+    print(f"OK: {len(pages)} docs page(s), ~{n_refs} references checked, "
+          "no dangling links")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
