@@ -12,7 +12,15 @@ Compares, on a multi-block corpus frame (round-trip verified):
   * engine inline planned — same, forced onto the two-phase plan/execute
     per-block decoder (`two_phase=True`);
   * engine thread   — workers in {2, 4}, ThreadPoolExecutor;
-  * engine process  — workers in {2, 4}, fork pool (true multi-core).
+  * engine process  — workers in {2, 4}, fork pool (true multi-core);
+  * engine device   — `executor="device"`: host planning feeds vmapped jit
+    plan execution (pointer-doubling resolve), adaptive and worst-case
+    static round counts.  The `device` JSON section also records
+    `host_bytes` for the fetch-to-host drain and for the
+    `decode_to_device` restore path (0 with verification deferred) —
+    transfer symmetry with `BENCH_engine_batched.json`'s `host_transfer`.
+    On this CPU container the "device" is the host, so the numbers are
+    bookkeeping, not the accelerator end-state (see docs/tuning.md).
 
 Configs are timed INTERLEAVED (one rep of each per round, min over rounds)
 so CPU-frequency noise hits every config equally.  The random-access
@@ -77,6 +85,9 @@ def run(fast: bool = True) -> dict:
         for w in (2, 4):
             engines[f"engine_process_w{w}"] = LZ4DecodeEngine(
                 workers=w, executor="process")
+    engines["engine_device"] = LZ4DecodeEngine(executor="device")
+    engines["engine_device_static"] = LZ4DecodeEngine(
+        executor="device", adaptive_rounds=False)
     for name, eng in engines.items():
         configs[name] = (lambda e: lambda: e.decode(frame))(eng)
 
@@ -116,6 +127,29 @@ def run(fast: bool = True) -> dict:
     out["best_parallel_speedup"] = max(parallel) if parallel else None
     out["engine_inline_speedup"] = out["configs"]["engine_inline"][
         "speedup_vs_serial"]
+
+    # -- device executor: transfer accounting + restore path ----------------
+    dev = engines["engine_device"]
+    assert dev.decode(frame) == data
+    dev_stats = dev.stats
+    t0 = time.perf_counter()
+    arr = dev.decode_to_device(frame, verify=False)
+    arr.block_until_ready()
+    to_device_s = time.perf_counter() - t0
+    assert dev.stats.host_bytes == 0, "decode_to_device(verify=False) fetched"
+    out["device"] = {
+        "ms": out["configs"]["engine_device"]["ms"],
+        "mbps": out["configs"]["engine_device"]["mbps"],
+        "speedup_vs_serial":
+            out["configs"]["engine_device"]["speedup_vs_serial"],
+        "static_rounds_ms": out["configs"]["engine_device_static"]["ms"],
+        "dispatches": dev_stats.dispatches,
+        "device_blocks": dev_stats.device_blocks,
+        "fallback_blocks": dev_stats.fallback_blocks,
+        "host_bytes": dev_stats.host_bytes,          # == decoded payload
+        "to_device_ms": round(to_device_s * 1000, 1),
+        "to_device_host_bytes": 0,                   # asserted above
+    }
 
     # -- random access: read_range vs full-decode-then-slice ----------------
     rng = np.random.default_rng(0)

@@ -140,12 +140,18 @@ def latest_step(ckpt_dir: str) -> int | None:
     return max(steps) if steps else None
 
 
-def restore(ckpt_dir: str, step: int, like, shardings=None):
+def restore(ckpt_dir: str, step: int, like, shardings=None,
+            decode_engine=None):
     """Rebuild the tree of `like` (a pytree of arrays or ShapeDtypeStructs).
 
     `shardings`: optional matching pytree of NamedShardings for elastic
     restore onto the current mesh.
+    `decode_engine`: optional `LZ4DecodeEngine` override — e.g. an
+    ``executor="process"`` engine for multi-core restores, or
+    ``executor="device"`` to run block decompression inside the jit graph
+    (plan on host, execute on accelerator) instead of in host NumPy.
     """
+    eng = decode_engine or default_decode_engine()
     final = os.path.join(ckpt_dir, f"ckpt_{step}")
     man_path = os.path.join(final, "manifest.json")
     if not os.path.exists(man_path):
@@ -169,9 +175,10 @@ def restore(ckpt_dir: str, step: int, like, shardings=None):
                 payloads.append(data)
                 raws.append(not b["lz4"])
             # A leaf's blocks are independent: the decode engine plans and
-            # executes them across its worker pool instead of a serial loop.
+            # executes them across its worker pool (or, with the device
+            # executor, inside vmapped jit dispatches) instead of a loop.
             try:
-                raw = b"".join(default_decode_engine().decode_blocks(payloads, raws))
+                raw = b"".join(eng.decode_blocks(payloads, raws))
             except LZ4FormatError as err:
                 raise CheckpointError(f"corrupt block in {path}: {err}") from err
             if binascii.crc32(bytes(raw)) & 0xFFFFFFFF != e["crc32"]:

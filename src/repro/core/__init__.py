@@ -10,13 +10,21 @@ Public API:
                            ``device_emit=True`` (default) byte emission stays
                            in the jit graph and only final frame bytes cross
                            the host boundary
-    LZ4DecodeEngine      — parallel two-phase (plan/execute) frame decoder
+    LZ4DecodeEngine      — parallel two-phase (plan/execute) frame decoder;
+                           ``executor="device"`` runs plan execution inside
+                           the jit graph (fixed-shape DevicePlans, pointer-
+                           doubling source resolve) and `decode_to_device`
+                           restores straight into device memory
     FrameReader          — seekable random access over a frame's block table
+                           (`read_range_device` keeps the bytes on device)
     default_engine       — process-wide shared LZ4Engine
     compress_greedy      — software baseline (GitHub-like, multi-match, unbounded)
     compress_windowed    — the paper's single-match / bounded scheme (golden model)
     encode_block / decode_block — exact LZ4 block format round trip
     plan_block / execute_plan   — two-phase block decode building blocks
+    DevicePlan / to_device_plan — fixed-shape (jit-stackable) form of a
+                           BlockPlan; `execute_device_plan` is the NumPy
+                           twin of the on-device decode algorithm
     emit_block           — host-side vectorized (prefix-sum) block emission:
                            the engine's ``device_emit=False`` path and the
                            oracle for the device emitter
@@ -48,12 +56,18 @@ from .frame import (  # noqa: F401
 )
 from .decode_plan import (  # noqa: F401
     BlockPlan,
+    DevicePlan,
+    DevicePlanCaps,
+    DevicePlanOverflow,
     decode_block_planned,
+    execute_device_plan,
     execute_plan,
     plan_block,
     plan_block_fast,
+    to_device_plan,
 )
 from .decode_engine import (  # noqa: F401
+    DecodeStats,
     FrameReader,
     LZ4DecodeEngine,
     default_decode_engine,

@@ -9,7 +9,7 @@ embarrassingly parallel (Sitaridi et al., arXiv 1606.00519):
   * each block is decoded in two phases — `plan_block_fast` parses the token
     stream once into flat NumPy copy arrays (feedback-free field extraction,
     decode_plan.py), `execute_plan` runs the literal/match copies in bulk;
-  * independent blocks fan out across a worker pool.  Three executors:
+  * independent blocks fan out across a worker pool.  Four executors:
 
       "serial"   — decode blocks inline.  The default: the planned decoder
                    already beats the old serial `decode_frame`, and on
@@ -23,6 +23,20 @@ embarrassingly parallel (Sitaridi et al., arXiv 1606.00519):
                    forking a process with live JAX threads is officially
                    discouraged (workers never touch JAX, and only the pool
                    fork happens, but create the engine early if you use it).
+      "device"   — phase two runs INSIDE jit: host planning
+                   (`plan_block_fast` -> `to_device_plan`) stacks a
+                   micro-batch of fixed-shape `DevicePlan`s and ONE
+                   vmapped+jitted `kernels.ops.decode_gather` dispatch
+                   resolves and materializes every block's bytes on the
+                   accelerator (pointer-doubling source resolve — see
+                   decode_plan.py), double-buffered like the compress
+                   engine.  The read-side mirror of `device_emit`:
+                   `DecodeStats.host_bytes` counts exactly the decoded
+                   bytes fetched back (or nothing, via
+                   `decode_to_device` — the accelerator-to-accelerator
+                   restore path used by serving KV-offload).  Blocks whose
+                   plans overflow the fixed caps fall back to the host
+                   executor per block (counted in `fallback_blocks`).
 
   * version-2 frames carry per-block CRC32s of the uncompressed content,
     verified as each block lands, so corruption is caught at the block that
@@ -47,15 +61,47 @@ from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
-from .decode_plan import execute_plan, plan_block_fast
+from .decode_plan import (
+    MAX_RESOLVE_ROUNDS,
+    DevicePlanCaps,
+    DevicePlanOverflow,
+    execute_plan,
+    plan_block_fast,
+    to_device_plan,
+)
 from .decoder import LZ4FormatError, decode_block
 from .frame import FrameFormatError, check_block, frame_info
-from .lz4_types import MAX_BLOCK
+from .lz4_types import MAX_BLOCK, pad_pow2_count
 
 __all__ = ["LZ4DecodeEngine", "DecodeStats", "FrameReader",
            "default_decode_engine"]
 
-_EXECUTORS = ("serial", "thread", "process")
+_EXECUTORS = ("serial", "thread", "process", "device")
+
+
+@functools.lru_cache(maxsize=None)
+def _device_decode_compiled(out_cap: int, rounds: int, use_pallas: bool):
+    """Jitted vmap of the single-block decode graph, cached per static
+    config (shared across engine instances; jit's own cache then keys on
+    the stacked batch shape, bounded by the power-of-two padding)."""
+    import jax
+
+    from repro.kernels.ops import decode_gather
+
+    fn = functools.partial(decode_gather, out_cap=out_cap, rounds=rounds,
+                           use_pallas=use_pallas)
+    return jax.jit(jax.vmap(fn))
+
+
+def _round_bucket(rounds: int) -> int:
+    """Round the needed pointer-doubling depth up to a power of two so the
+    number of compiled graph variants stays bounded ({0, 1, 2, 4, 8, 16})."""
+    if rounds <= 0:
+        return 0
+    b = 1
+    while b < rounds:
+        b <<= 1
+    return b
 
 
 @functools.lru_cache(maxsize=1)
@@ -104,13 +150,23 @@ def _plain_block_task(args) -> bytes:
 
 @dataclasses.dataclass
 class DecodeStats:
-    """Counters from the most recent decode call."""
+    """Counters from the most recent decode call.
+
+    ``host_bytes`` is the read-side twin of `EngineStats.host_bytes`: every
+    byte fetched device -> host by the "device" executor (exactly the
+    decoded payload — rows are slice-fetched to their true usize — or zero
+    for a `decode_to_device` restore that never leaves the accelerator).
+    """
 
     blocks: int = 0
     raw_blocks: int = 0
     bytes_in: int = 0
     bytes_out: int = 0
     parallel: bool = False
+    dispatches: int = 0        # device executor: jit dispatches issued
+    device_blocks: int = 0     # blocks decoded inside the jit graph
+    fallback_blocks: int = 0   # device executor blocks decoded on host
+    host_bytes: int = 0        # bytes fetched device -> host
 
 
 class LZ4DecodeEngine:
@@ -120,21 +176,40 @@ class LZ4DecodeEngine:
     >>> data = eng.decode(frame)             # blocks fan across the pool
     >>> data[a:b] == FrameReader(frame, engine=eng).read_range(a, b - a)
     True
+
+    With ``executor="device"`` phase two runs in jit — one vmapped dispatch
+    per micro-batch of stacked `DevicePlan`s — and `decode_to_device`
+    returns the restored bytes as a device array without any host copy.
     """
 
     def __init__(self, workers: int | None = None, executor: str | None = None,
-                 min_parallel_blocks: int = 2, two_phase: bool | None = None):
+                 min_parallel_blocks: int = 2, two_phase: bool | None = None,
+                 micro_batch: int = 8, use_pallas: bool = False,
+                 caps: DevicePlanCaps | None = None,
+                 adaptive_rounds: bool = True):
         if executor is not None and executor not in _EXECUTORS:
             raise ValueError(f"executor must be one of {_EXECUTORS}")
         if workers is not None and workers < 1:
             raise ValueError("workers must be >= 1")
+        if micro_batch < 1:
+            raise ValueError("micro_batch must be >= 1")
         if executor is None:
             executor = "serial" if (workers or 1) == 1 else "thread"
         if workers is None:
-            workers = 1 if executor == "serial" else min(4, os.cpu_count() or 1)
+            workers = 1 if executor in ("serial", "device") \
+                else min(4, os.cpu_count() or 1)
         self.workers = workers
-        self.executor = executor if workers > 1 else "serial"
+        self.executor = executor if (workers > 1 or executor == "device") \
+            else "serial"
         self.min_parallel_blocks = min_parallel_blocks
+        # Device-executor knobs (harmless elsewhere): blocks per vmapped
+        # dispatch, kernel selection, fixed plan-array caps, and whether
+        # host planning computes exact wave depths so shallow micro-batches
+        # compile fewer pointer-doubling rounds (vs the static worst case).
+        self.micro_batch = micro_batch
+        self.use_pallas = use_pallas
+        self.caps = caps or DevicePlanCaps()
+        self.adaptive_rounds = adaptive_rounds
         # Per-block strategy: the fused chunked decoder wins single-threaded
         # on CPython (one loop, no plan materialization), the two-phase
         # plan/execute decoder releases the GIL through its NumPy phases and
@@ -180,7 +255,7 @@ class LZ4DecodeEngine:
     def _map(self, fn, items: list) -> list:
         """Run fn over items on the configured executor (inline when the
         batch is too small for fan-out to pay)."""
-        if (self.executor != "serial" and self.workers > 1
+        if (self.executor in ("thread", "process") and self.workers > 1
                 and len(items) >= self.min_parallel_blocks):
             self.stats.parallel = True
             # ~4 chunks per worker: amortizes the process pool's per-task
@@ -216,25 +291,129 @@ class LZ4DecodeEngine:
             bytes_in=sum(len(p) for p in payloads),
         )
         out: list[bytes | None] = [None] * len(payloads)
-        jobs = []
-        for i, (payload, raw) in enumerate(zip(payloads, raws)):
-            if raw:
-                out[i] = bytes(payload)
-            else:
-                jobs.append((i, (bytes(payload),
-                                 usizes[i] if usizes is not None else None, i,
-                                 self.two_phase)))
-        for (i, _), data in zip(jobs, self._map(_plain_block_task,
-                                                [j for _, j in jobs])):
-            out[i] = data
+        if self.executor == "device":
+            jobs = []
+            for i, (payload, raw) in enumerate(zip(payloads, raws)):
+                payload = bytes(payload)
+                if raw:
+                    out[i] = payload
+                    continue
+                usize = usizes[i] if usizes is not None else None
+                plan, dplan = self._plan_for_device(
+                    payload, usize if usize is not None else MAX_BLOCK)
+                if usize is not None and plan.usize != usize:
+                    raise LZ4FormatError(
+                        f"block {i}: decoded {plan.usize} bytes, "
+                        f"expected {usize}"
+                    )
+                if dplan is None:
+                    self.stats.fallback_blocks += 1
+                    out[i] = execute_plan(payload, plan).tobytes()
+                else:
+                    jobs.append((i, payload, dplan))
+
+            def finish(slot, payload, dp, row):
+                out[slot] = self._fetch_row(row, dp.out_size)
+
+            self._execute_device(jobs, finish)
+        else:
+            jobs = []
+            for i, (payload, raw) in enumerate(zip(payloads, raws)):
+                if raw:
+                    out[i] = bytes(payload)
+                else:
+                    jobs.append((i, (bytes(payload),
+                                     usizes[i] if usizes is not None else None,
+                                     i, self.two_phase)))
+            for (i, _), data in zip(jobs, self._map(_plain_block_task,
+                                                    [j for _, j in jobs])):
+                out[i] = data
         self.stats.bytes_out = sum(len(d) for d in out)
         return out
+
+    # -- device executor ----------------------------------------------------
+
+    def _plan_for_device(self, payload: bytes, cap: int | None):
+        """Host phase one for the device executor: plan, then convert to a
+        fixed-shape DevicePlan.  Returns (plan, dplan-or-None); a None
+        dplan means the plan overflowed the caps and this block must
+        execute on host (the per-block fallback, counted by the caller)."""
+        plan = plan_block_fast(payload, max_out=cap)
+        if len(payload) > self.caps.blk_cap:
+            return plan, None
+        try:
+            return plan, to_device_plan(plan, self.caps,
+                                        compute_waves=self.adaptive_rounds)
+        except DevicePlanOverflow:
+            return plan, None
+
+    def _dispatch_device(self, batch: list):
+        """ONE vmapped jit dispatch for a micro-batch of (payload, dplan).
+
+        Pads the batch count to the next power of two (bounded compile
+        shapes, like the compress engine) and buckets the pointer-doubling
+        depth to a power of two; padding rows decode to out_size=0.
+        """
+        import jax.numpy as jnp
+
+        caps = self.caps
+        m = pad_pow2_count(len(batch), self.micro_batch)
+        blk = np.zeros((m, caps.blk_cap), np.uint8)
+        lit = [np.zeros((m, caps.max_lit), np.int32) for _ in range(3)]
+        mat = [np.zeros((m, caps.max_match), np.int32) for _ in range(2)]
+        scal = [np.zeros((m,), np.int32) for _ in range(3)]
+        rounds = 0
+        for j, (payload, dp) in enumerate(batch):
+            blk[j, : len(payload)] = np.frombuffer(payload, np.uint8)
+            lit[0][j], lit[1][j], lit[2][j] = dp.lit_src, dp.lit_dst, dp.lit_len
+            mat[0][j], mat[1][j] = dp.match_dst, dp.match_off
+            scal[0][j], scal[1][j], scal[2][j] = dp.n_lit, dp.n_match, dp.out_size
+            rounds = max(rounds, dp.n_waves)
+        fn = _device_decode_compiled(caps.out_cap, _round_bucket(rounds),
+                                     self.use_pallas)
+        self.stats.dispatches += 1
+        self.stats.device_blocks += len(batch)
+        return fn(jnp.asarray(blk), *(jnp.asarray(a) for a in lit),
+                  *(jnp.asarray(a) for a in mat),
+                  *(jnp.asarray(a) for a in scal))
+
+    def _execute_device(self, jobs: list, finish) -> None:
+        """Micro-batched, double-buffered device execution.
+
+        ``jobs``: list of (slot, payload, dplan); ``finish(slot, payload,
+        dplan, row)`` consumes one block's device output row (a jnp view of
+        the padded output buffer) as each micro-batch drains.  Micro-batch
+        i+1 is dispatched before batch i's rows are consumed, so host-side
+        stacking overlaps device compute (jax dispatch is asynchronous).
+        """
+        inflight = None
+        for start in range(0, len(jobs), self.micro_batch):
+            chunk = jobs[start: start + self.micro_batch]
+            res = self._dispatch_device([(p, dp) for _, p, dp in chunk])
+            if inflight is not None:
+                prev, out = inflight
+                for row, (slot, payload, dp) in enumerate(prev):
+                    finish(slot, payload, dp, out[row])
+            inflight = (chunk, res)
+        if inflight is not None:
+            prev, out = inflight
+            for row, (slot, payload, dp) in enumerate(prev):
+                finish(slot, payload, dp, out[row])
+
+    def _fetch_row(self, row, usize: int) -> bytes:
+        """Slice-fetch exactly `usize` decoded bytes of one output row
+        (the transfer the host_bytes counter measures)."""
+        data = np.asarray(row[:usize]).tobytes()
+        self.stats.host_bytes += usize
+        return data
 
     # -- frames -------------------------------------------------------------
 
     def _decode_entries(self, frame: bytes, entries: list[tuple[int, dict]]
                         ) -> list[bytes]:
         """Decode the given (index, table-entry) frame blocks, in order."""
+        if self.executor == "device":
+            return self._decode_entries_device(frame, entries)
         out: list[bytes | None] = [None] * len(entries)
         jobs = []
         for j, (i, b) in enumerate(entries):
@@ -249,6 +428,71 @@ class LZ4DecodeEngine:
                                                 [a for _, a in jobs])):
             out[j] = data
         return out
+
+    def _decode_entries_device(self, frame: bytes,
+                               entries: list[tuple[int, dict]],
+                               to_device: bool = False, verify: bool = True):
+        """Device-executor decode of (index, table-entry) frame blocks.
+
+        ``to_device=True`` returns per-block DEVICE arrays (uint8) instead
+        of host bytes — nothing crosses the device->host boundary unless
+        ``verify`` needs the content for its CRC check (raw/fallback blocks
+        are uploaded host->device; `DecodeStats.host_bytes` stays the
+        download-only counter, mirroring `EngineStats`).
+        """
+        meta = {}
+        out: list = [None] * len(entries)
+        jobs = []
+        for j, (i, b) in enumerate(entries):
+            payload = frame[b["offset"]: b["offset"] + b["csize"]]
+            if b["raw"]:
+                check_block(i, b["usize"], b["crc"], payload)
+                out[j] = self._host_result(payload, to_device)
+                continue
+            try:
+                plan, dplan = self._plan_for_device(payload, b["usize"])
+            except FrameFormatError:
+                raise
+            except LZ4FormatError as e:
+                raise FrameFormatError(f"block {i}: {e}") from e
+            # Size-vs-table parity with the host paths, for free at plan
+            # time: the plan knows the exact decoded size before dispatch,
+            # so a lying table entry is rejected even when ``verify=False``
+            # skips the post-decode check_block (which would need a fetch).
+            if plan.usize != b["usize"]:
+                raise FrameFormatError(
+                    f"block {i}: decoded {plan.usize} bytes, "
+                    f"table says {b['usize']}"
+                )
+            if dplan is None:
+                self.stats.fallback_blocks += 1
+                data = execute_plan(payload, plan).tobytes()
+                check_block(i, b["usize"], b["crc"], data)
+                out[j] = self._host_result(data, to_device)
+                continue
+            meta[j] = (i, b)
+            jobs.append((j, payload, dplan))
+
+        def finish(slot, payload, dp, row):
+            i, b = meta[slot]
+            dev = row[: dp.out_size]
+            if to_device and not verify:
+                out[slot] = dev
+                return
+            data = self._fetch_row(row, dp.out_size)
+            check_block(i, b["usize"], b["crc"], data)
+            out[slot] = dev if to_device else data
+
+        self._execute_device(jobs, finish)
+        return out
+
+    @staticmethod
+    def _host_result(data: bytes, to_device: bool):
+        if not to_device:
+            return data
+        import jax.numpy as jnp
+
+        return jnp.asarray(np.frombuffer(data, np.uint8))
 
     def decode(self, frame: bytes) -> bytes:
         """Frame -> original bytes; bit-identical to `decode_frame_serial`.
@@ -267,6 +511,38 @@ class LZ4DecodeEngine:
         out = b"".join(parts)
         self.stats.bytes_out = len(out)
         return out
+
+    def decode_to_device(self, frame: bytes, verify: bool = True):
+        """Frame -> decoded bytes as ONE device uint8 array (no host copy).
+
+        The accelerator-to-accelerator restore path: compressed blocks are
+        uploaded, decoded in-graph, and concatenated on device, so a
+        KV-offload restore never materializes the plaintext on the host.
+        ``verify=True`` (default) still fetches each block's content for
+        its CRC check — integrity over transfer symmetry; pass
+        ``verify=False`` to keep the loop fully device-resident (the frame
+        table's structural validation and the host planner's format checks
+        still run, only the content checksum is skipped — `host_bytes`
+        then stays 0 for compressed blocks).
+
+        Works on any engine instance (it always uses the device execution
+        path, regardless of `executor`).
+        """
+        import jax.numpy as jnp
+
+        info = frame_info(frame)
+        blocks = info["blocks"]
+        self.stats = DecodeStats(
+            blocks=len(blocks),
+            raw_blocks=sum(b["raw"] for b in blocks),
+            bytes_in=len(frame),
+        )
+        parts = self._decode_entries_device(
+            frame, list(enumerate(blocks)), to_device=True, verify=verify)
+        self.stats.bytes_out = sum(b["usize"] for b in blocks)
+        if not parts:
+            return jnp.zeros((0,), jnp.uint8)
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
 
 
 class FrameReader:
@@ -378,6 +654,27 @@ class FrameReader:
                 self._cache_put(i, data)
         joined = have[cover[0]] if len(cover) == 1 else \
             b"".join(have[i] for i in cover)
+        base = int(self._starts[cover[0]])
+        return joined[start - base: start - base + length]
+
+    def read_range_device(self, start: int, length: int, verify: bool = True):
+        """`read_range`, but the result is a DEVICE uint8 array.
+
+        Covering blocks are decoded in-graph (`_decode_entries_device`) and
+        concatenated + sliced on device, so a KV-offload restore of one
+        request's slice never lands on the host (``verify=False`` skips the
+        CRC fetch too; see `LZ4DecodeEngine.decode_to_device`).  Bypasses
+        the host-bytes LRU — device buffers are the accelerator's to cache.
+        """
+        import jax.numpy as jnp
+
+        cover = self.blocks_for_range(start, length)
+        if len(cover) == 0:
+            return jnp.zeros((0,), jnp.uint8)
+        parts = self._engine._decode_entries_device(
+            self._frame, [(i, self._blocks[i]) for i in cover],
+            to_device=True, verify=verify)
+        joined = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
         base = int(self._starts[cover[0]])
         return joined[start - base: start - base + length]
 

@@ -30,6 +30,29 @@ them:
 `decode_block_planned` composes the two and is bit-identical to the serial
 `decode_block` / `decode_block_bytewise` oracles (asserted in tests on
 random, adversarial, and overlap-heavy corpora).
+
+Device-side execution (the read-path mirror of the compress engine's
+device-resident emit) needs one more shape: `BlockPlan` is ragged — every
+block has a different number of literal runs and matches — but a jit graph
+wants uniform arrays.  `DevicePlan` is the fixed-shape, padding-aware form:
+flat int32 arrays sized by `DevicePlanCaps`, so a micro-batch of blocks
+stacks into `(M, cap)` arrays exactly like the compress side's block stack.
+`to_device_plan` converts (rejecting plans that exceed the caps with
+`DevicePlanOverflow`, which callers turn into a host fallback), and
+`execute_device_plan` is the NumPy oracle of the device algorithm:
+
+  the dependency-wave formulation above is data-dependent (an RLE chain
+  degrades to one match per wave — fine on the host, where a sequential
+  fallback exists, fatal in a fixed-shape graph).  Instead, every output
+  byte's *immediate* source is a pure function of the plan (literal bytes
+  point at the input block, match bytes at output position ``k - offset``),
+  and the transitive source is resolved by POINTER DOUBLING: after r
+  rounds of ``ptr = ptr[ptr]`` every chain of depth <= 2^r lands on a
+  literal byte, so ceil(log2(MAX_BLOCK)) = 16 rounds suffice for ANY valid
+  block — pathological chains included, no fallback path.  `DevicePlan`'s
+  per-sequence ``wave`` index records the round at which each match's bytes
+  resolve; its max (``n_waves``) lets the decode engine compile graphs with
+  fewer rounds for shallow micro-batches.
 """
 from __future__ import annotations
 
@@ -40,7 +63,9 @@ import numpy as np
 
 from .decoder import LZ4FormatError
 
-__all__ = ["BlockPlan", "plan_block", "plan_block_fast", "execute_plan",
+__all__ = ["BlockPlan", "DevicePlan", "DevicePlanCaps", "DevicePlanOverflow",
+           "MAX_RESOLVE_ROUNDS", "plan_block", "plan_block_fast",
+           "execute_plan", "execute_device_plan", "to_device_plan",
            "decode_block_planned"]
 
 
@@ -481,6 +506,201 @@ def execute_plan(block: bytes, plan: BlockPlan, out: np.ndarray | None = None,
         pend = pend[~ready]
         waves += 1
     return out
+
+
+# ---------------------------------------------------------------------------
+# Fixed-shape device plans (the jit-consumable form of BlockPlan)
+# ---------------------------------------------------------------------------
+
+# ceil(log2(MAX_BLOCK)): after this many pointer-doubling rounds every
+# source chain in a <= 64 KB output is resolved (chain positions strictly
+# decrease, so depth < 2^16), for ANY valid plan.  The static worst case.
+MAX_RESOLVE_ROUNDS = 16
+
+
+class DevicePlanOverflow(ValueError):
+    """Plan does not fit the fixed-shape caps; caller should fall back to
+    host execution for this block (the decode engine does, and counts it)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class DevicePlanCaps:
+    """Static array sizes for `DevicePlan` (= compiled-shape axes).
+
+    Defaults are sized for the paper scheme the compress engine emits: one
+    match per `pws`-byte window caps matches at MAX_BLOCK/8 = 8192 (plus
+    one literal run per match + the final run), padded up for lane
+    alignment.  Foreign LZ4 blocks can legally exceed this (down to 4-byte
+    matches back to back — up to 16384); they overflow and decode on host.
+    """
+
+    max_lit: int = 8448      # literal-span slots (engine scheme: <= 8193)
+    max_match: int = 8448    # match slots (engine scheme: <= 8192)
+    blk_cap: int = 65536     # compressed-payload buffer (csize <= usize)
+    out_cap: int = 65536     # decoded-output buffer (usize <= MAX_BLOCK)
+
+
+_DEFAULT_CAPS = DevicePlanCaps()
+
+
+@dataclasses.dataclass
+class DevicePlan:
+    """Fixed-shape `BlockPlan`: flat int32 arrays padded to `caps` sizes.
+
+    Rows past `n_lit` / `n_match` are zero padding and must be ignored
+    (the device graph masks them by slot index, not by sentinel values).
+    ``wave[m]`` is the pointer-doubling round at which match m's bytes are
+    fully resolved (see module docstring); ``n_waves`` is the block's max —
+    the number of on-device gather rounds this plan actually needs.  When
+    the converter is asked to skip wave analysis, ``wave`` is -1 and
+    ``n_waves`` is the static worst case `MAX_RESOLVE_ROUNDS`.
+    """
+
+    caps: DevicePlanCaps
+    lit_src: np.ndarray    # (max_lit,) int32 — source offset in the block
+    lit_dst: np.ndarray    # (max_lit,) int32 — dest offset in the output
+    lit_len: np.ndarray    # (max_lit,) int32
+    match_dst: np.ndarray  # (max_match,) int32
+    match_off: np.ndarray  # (max_match,) int32 — back-offset (dst - src)
+    match_len: np.ndarray  # (max_match,) int32
+    wave: np.ndarray       # (max_match,) int32 — resolve round (or -1)
+    n_lit: int
+    n_match: int
+    out_size: int
+    n_waves: int
+
+    @property
+    def n_sequences(self) -> int:
+        return self.n_lit + self.n_match
+
+
+def _expand_spans(starts: np.ndarray, lens: np.ndarray) -> np.ndarray:
+    """Flat indices covering every [start, start+len) — fresh-array twin of
+    `_span_fill` for the conversion path (not perf-critical there)."""
+    total = int(lens.sum())
+    v = np.ones(total, np.int64)
+    ends = np.cumsum(lens)
+    v[0] = starts[0]
+    if len(starts) > 1:
+        v[ends[:-1]] = starts[1:] - starts[:-1] - lens[:-1] + 1
+    np.cumsum(v, out=v)
+    return v
+
+
+def _byte_sources(plan: BlockPlan):
+    """Per-output-byte immediate source maps (the device layout, in NumPy).
+
+    Returns ``(is_lit, lit_blk, ptr)`` over ``[0, plan.usize)``:
+    ``is_lit[k]`` marks bytes produced by a literal run, ``lit_blk[k]`` is
+    their source index in the compressed block, and ``ptr[k]`` is one
+    application of the source function f — k itself for literal bytes
+    (fixed point), ``k - offset`` for match bytes.
+    """
+    usize = plan.usize
+    is_lit = np.zeros(usize, bool)
+    lit_blk = np.zeros(usize, np.int64)
+    ptr = np.arange(usize, dtype=np.int64)
+    if len(plan.lit_len):
+        dst_v = _expand_spans(plan.lit_dst, plan.lit_len)
+        is_lit[dst_v] = True
+        lit_blk[dst_v] = _expand_spans(plan.lit_src, plan.lit_len)
+    if len(plan.match_len):
+        md_v = _expand_spans(plan.match_dst, plan.match_len)
+        off_v = np.repeat(plan.match_dst - plan.match_src, plan.match_len)
+        ptr[md_v] = md_v - off_v
+    return is_lit, lit_blk, ptr
+
+
+def _resolve_rounds(is_lit: np.ndarray, ptr: np.ndarray):
+    """Run pointer doubling to a fixed point; returns (ptr_resolved, round
+    at which each byte resolved).  Bounded by MAX_RESOLVE_ROUNDS."""
+    rounds = np.zeros(len(ptr), np.int32)
+    resolved = is_lit[ptr] if len(ptr) else np.zeros(0, bool)
+    r = 0
+    while not resolved.all():
+        r += 1
+        assert r <= MAX_RESOLVE_ROUNDS, "unresolvable source chain"
+        ptr = ptr[ptr]
+        newly = is_lit[ptr] & ~resolved
+        rounds[newly] = r
+        resolved |= newly
+    return ptr, rounds
+
+
+def execute_device_plan(block: bytes, plan: BlockPlan) -> np.ndarray:
+    """NumPy oracle of the DEVICE decode algorithm (`kernels.ops.decode_gather`).
+
+    Same result as `execute_plan`, different mechanism: build the per-byte
+    immediate-source maps, pointer-double to transitive literal sources,
+    then materialize the whole output with ONE gather from the block.  The
+    tests pin `execute_plan` == this == the jnp fallback == the Pallas
+    kernel, so the device graph has an explicit host twin.
+    """
+    if plan.usize == 0:
+        return np.zeros(0, np.uint8)
+    is_lit, lit_blk, ptr = _byte_sources(plan)
+    ptr, _ = _resolve_rounds(is_lit, ptr)
+    blk = np.frombuffer(block, np.uint8)
+    return blk[lit_blk[ptr]]
+
+
+def to_device_plan(plan: BlockPlan, caps: DevicePlanCaps | None = None,
+                   compute_waves: bool = True) -> DevicePlan:
+    """`BlockPlan` -> fixed-shape `DevicePlan` (raises `DevicePlanOverflow`
+    when the plan exceeds ``caps``).
+
+    ``compute_waves=True`` runs the host doubling analysis to fill the
+    per-sequence ``wave`` index and the exact ``n_waves`` — O(usize·rounds)
+    NumPy work that lets the decode engine dispatch shallow micro-batches
+    with fewer on-device gather rounds.  ``False`` skips the analysis and
+    pins ``n_waves`` to the always-correct `MAX_RESOLVE_ROUNDS`.
+    """
+    caps = caps or _DEFAULT_CAPS
+    n_lit = len(plan.lit_len)
+    n_match = len(plan.match_len)
+    if n_lit > caps.max_lit:
+        raise DevicePlanOverflow(
+            f"{n_lit} literal runs exceed cap {caps.max_lit}")
+    if n_match > caps.max_match:
+        raise DevicePlanOverflow(
+            f"{n_match} matches exceed cap {caps.max_match}")
+    if plan.usize > caps.out_cap:
+        raise DevicePlanOverflow(
+            f"output size {plan.usize} exceeds cap {caps.out_cap}")
+
+    def _pad(values: np.ndarray, cap: int) -> np.ndarray:
+        out = np.zeros(cap, np.int32)
+        out[: len(values)] = values
+        return out
+
+    wave = np.full(caps.max_match, -1, np.int32)
+    n_waves = MAX_RESOLVE_ROUNDS
+    if compute_waves:
+        if plan.usize == 0:
+            n_waves = 0
+        else:
+            is_lit, _, ptr = _byte_sources(plan)
+            _, rounds = _resolve_rounds(is_lit, ptr)
+            n_waves = int(rounds.max())
+            if n_match:
+                md_v = _expand_spans(plan.match_dst, plan.match_len)
+                bounds = np.concatenate(
+                    ([0], np.cumsum(plan.match_len)[:-1]))
+                wave[:n_match] = np.maximum.reduceat(rounds[md_v], bounds)
+    return DevicePlan(
+        caps=caps,
+        lit_src=_pad(plan.lit_src, caps.max_lit),
+        lit_dst=_pad(plan.lit_dst, caps.max_lit),
+        lit_len=_pad(plan.lit_len, caps.max_lit),
+        match_dst=_pad(plan.match_dst, caps.max_match),
+        match_off=_pad(plan.match_dst - plan.match_src, caps.max_match),
+        match_len=_pad(plan.match_len, caps.max_match),
+        wave=wave,
+        n_lit=n_lit,
+        n_match=n_match,
+        out_size=plan.usize,
+        n_waves=n_waves,
+    )
 
 
 def decode_block_planned(block: bytes, max_out: int | None = None,

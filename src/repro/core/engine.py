@@ -55,6 +55,7 @@ from .lz4_types import (
     DEFAULT_MAX_MATCH,
     DEFAULT_PWS,
     MAX_BLOCK,
+    pad_pow2_count,
 )
 
 __all__ = ["LZ4Engine", "EngineStats", "default_engine"]
@@ -120,9 +121,12 @@ class LZ4Engine:
                  scan_impl: str = "sequential",
                  candidate_impl: str = "sort",
                  donate: bool | None = None,
-                 device_emit: bool = True):
+                 device_emit: bool = True,
+                 drain: str = "sliced"):
         if micro_batch < 1:
             raise ValueError("micro_batch must be >= 1")
+        if drain not in ("sliced", "full"):
+            raise ValueError('drain must be "sliced" or "full"')
         self.hash_bits = hash_bits
         self.max_match = max_match
         self.pws = pws
@@ -136,6 +140,13 @@ class LZ4Engine:
         # final bytes cross the host boundary.  False: fetch match records
         # and emit on host via emit_block (the bit-identity oracle path).
         self.device_emit = device_emit
+        # drain="sliced" (device_emit only): two-step fetch — size scalars
+        # first, then exactly `size` bytes per block, and NOTHING for
+        # blocks bound for raw passthrough — so host_bytes is the exact
+        # compressed payload.  "full" fetches the whole padded (M, out_cap)
+        # buffer per micro-batch in one transfer (fewer, larger copies; the
+        # pre-two-step behaviour, kept measurable in benchmarks).
+        self.drain = drain
         self.stats = EngineStats()
 
     # -- dispatch -----------------------------------------------------------
@@ -152,10 +163,7 @@ class LZ4Engine:
 
     def _pad_batch(self, chunks: list[bytes]) -> tuple[np.ndarray, np.ndarray]:
         """Stack chunks into a fixed-shape micro-batch (padded rows get n=0)."""
-        count = len(chunks)
-        m = self.micro_batch
-        if count < m:
-            m = min(m, 1 << (count - 1).bit_length()) if count > 1 else 1
+        m = pad_pow2_count(len(chunks), self.micro_batch)
         stack = np.zeros((m, MAX_BLOCK + _PAD), np.uint8)
         ns = np.zeros((m,), np.int32)
         for j, c in enumerate(chunks):
@@ -186,8 +194,28 @@ class LZ4Engine:
         if inflight is not None:
             yield from self._drain(*inflight)
 
+    def _fetch_sliced(self, out_dev, j: int, size: int) -> bytes:
+        """Slice-fetch exactly `size` compressed bytes of row j (the device
+        slice executes on-device; only the payload crosses to host)."""
+        data = np.asarray(out_dev[j, :size]).tobytes()
+        self.stats.host_bytes += size
+        return data
+
     def _drain(self, batch: list[bytes], res):
         if self.device_emit:
+            if self.drain == "sliced":
+                # Two-step drain: sync on the tiny size vector, then fetch
+                # exactly size[j] bytes per block — lazily, so blocks the
+                # caller stores as raw passthrough (size >= n) never fetch
+                # their emit buffer at all.
+                out_dev, size_dev = res
+                size = jax.device_get(size_dev)
+                self.stats.host_bytes += size.nbytes
+                for j, chunk in enumerate(batch):
+                    s = int(size[j])
+                    yield chunk, len(chunk), s, functools.partial(
+                        self._fetch_sliced, out_dev, j, s)
+                return
             out, size = jax.device_get(res)
             self.stats.host_bytes += out.nbytes + size.nbytes
             for j, chunk in enumerate(batch):

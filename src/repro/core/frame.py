@@ -9,17 +9,23 @@ is not decodable without knowing where each block ends and how large it was
 uncompressed.  This container makes `LZ4Engine.compress` output a single
 self-describing byte string:
 
-    frame  := magic(4) | version(1) | block_count(u32 LE) | table | payloads
+    frame  := magic(4) | version(1) | block_count(u32 LE)
+              [content_size(u64 LE)]                          (version 3)
+              | table | payloads
     table  := block_count x entry
     entry  := usize(u32 LE) | csize_flag(u32 LE)              (version 1)
-            | usize(u32 LE) | csize_flag(u32 LE) | crc32(u32) (version 2)
+            | usize(u32 LE) | csize_flag(u32 LE) | crc32(u32) (versions 2, 3)
 
 `csize_flag` holds the payload size in the low 31 bits; the high bit marks an
 uncompressible block stored raw (payload == original bytes, csize == usize).
 Payloads are concatenated in block order immediately after the table.
 Version 2 adds a CRC32 of each block's *uncompressed* content, so any stored
 corruption — including a flipped literal byte that still parses — is detected
-at decode time instead of surfacing as silent wrong output.
+at decode time instead of surfacing as silent wrong output.  Version 3 (the
+current writer default) additionally records the TOTAL content size in the
+header; `frame_info` cross-checks it against the block table's usize sum, so
+a corrupted table (or header) is rejected before any payload is decoded and
+readers can size output buffers from the header alone.
 
 The block table is a public seek index (Rapidgzip-style, arXiv 2308.08955):
 blocks are compressed independently, `frame_info` exposes each block's
@@ -52,11 +58,13 @@ from .lz4_types import MAX_BLOCK
 MAGIC = b"LZ4R"
 VERSION_V1 = 1
 VERSION_V2 = 2
-VERSION = VERSION_V2  # current writer version (when checksums are provided)
+VERSION_V3 = 3
+VERSION = VERSION_V3  # current writer version (checksums + content size)
 RAW_FLAG = 0x80000000
 _HEADER = struct.Struct("<4sBI")
+_CONTENT_SIZE = struct.Struct("<Q")  # v3: total uncompressed size
 _ENTRY_V1 = struct.Struct("<II")
-_ENTRY_V2 = struct.Struct("<III")
+_ENTRY_V2 = struct.Struct("<III")  # also the v3 entry
 
 
 class FrameFormatError(LZ4FormatError):
@@ -71,22 +79,31 @@ def block_crc(data: bytes) -> int:
 
 def encode_frame(payloads: list[bytes], usizes: list[int],
                  raw_flags: list[bool],
-                 checksums: list[int] | None = None) -> bytes:
+                 checksums: list[int] | None = None,
+                 content_size: bool = True) -> bytes:
     """Assemble a frame from per-block payloads.
 
     payloads  : compressed block bytes (or raw input bytes where flagged)
     usizes    : uncompressed size of each block
     raw_flags : True where the payload is stored raw (uncompressible block)
     checksums : optional per-block `block_crc` of the UNCOMPRESSED content;
-                when given the frame is written as version 2 (verified on
+                when given the frame is written as version 3 (verified on
                 decode), otherwise as version 1 (no integrity check).
+    content_size : write the total uncompressed size into the header
+                (version 3; requires checksums).  ``False`` produces a
+                version-2 frame, byte-identical to the pre-v3 writer.
     """
     if not (len(payloads) == len(usizes) == len(raw_flags)):
         raise ValueError("payloads/usizes/raw_flags length mismatch")
     if checksums is not None and len(checksums) != len(payloads):
         raise ValueError("checksums length mismatch")
-    version = VERSION_V1 if checksums is None else VERSION_V2
+    if checksums is None:
+        version = VERSION_V1
+    else:
+        version = VERSION_V3 if content_size else VERSION_V2
     parts = [_HEADER.pack(MAGIC, version, len(payloads))]
+    if version == VERSION_V3:
+        parts.append(_CONTENT_SIZE.pack(sum(usizes)))
     for i, (payload, usize, raw) in enumerate(zip(payloads, usizes, raw_flags)):
         if not 0 <= usize <= MAX_BLOCK:
             raise ValueError(f"block uncompressed size {usize} out of range")
@@ -108,25 +125,35 @@ def frame_info(frame: bytes) -> dict:
 
     Raises FrameFormatError without touching any payload bytes.  Each block
     dict carries the seek-index fields: `usize`, `csize`, `raw`, payload
-    `offset` into the frame, and `crc` (None for version-1 frames).
+    `offset` into the frame, and `crc` (None for version-1 frames).  The
+    result's `content_size` is the version-3 header total (None for older
+    versions), already validated against the table's usize sum — so a
+    corrupted table or header field is caught BEFORE any payload decode.
     """
     if len(frame) < _HEADER.size:
         raise FrameFormatError("truncated frame header")
     magic, version, count = _HEADER.unpack_from(frame, 0)
     if magic != MAGIC:
         raise FrameFormatError(f"bad magic {magic!r}")
-    if version not in (VERSION_V1, VERSION_V2):
+    if version not in (VERSION_V1, VERSION_V2, VERSION_V3):
         raise FrameFormatError(f"unsupported frame version {version}")
+    table_start = _HEADER.size
+    content_size = None
+    if version == VERSION_V3:
+        if len(frame) < table_start + _CONTENT_SIZE.size:
+            raise FrameFormatError("truncated content-size header")
+        (content_size,) = _CONTENT_SIZE.unpack_from(frame, table_start)
+        table_start += _CONTENT_SIZE.size
     entry = _ENTRY_V1 if version == VERSION_V1 else _ENTRY_V2
-    table_end = _HEADER.size + count * entry.size
+    table_end = table_start + count * entry.size
     if len(frame) < table_end:
         raise FrameFormatError("truncated block table")
     blocks = []
     off = table_end
     for i in range(count):
-        fields = entry.unpack_from(frame, _HEADER.size + i * entry.size)
+        fields = entry.unpack_from(frame, table_start + i * entry.size)
         usize, cf = fields[0], fields[1]
-        crc = fields[2] if version == VERSION_V2 else None
+        crc = fields[2] if version != VERSION_V1 else None
         raw = bool(cf & RAW_FLAG)
         csize = cf & ~RAW_FLAG
         if usize > MAX_BLOCK:
@@ -140,7 +167,14 @@ def frame_info(frame: bytes) -> dict:
         raise FrameFormatError(
             f"frame length {len(frame)} != header-implied {off}"
         )
-    return {"version": version, "block_count": count, "blocks": blocks}
+    if content_size is not None:
+        total = sum(b["usize"] for b in blocks)
+        if total != content_size:
+            raise FrameFormatError(
+                f"content size {content_size} != block-table total {total}"
+            )
+    return {"version": version, "block_count": count, "blocks": blocks,
+            "content_size": content_size}
 
 
 def check_block(i: int, usize: int, crc: int | None, data: bytes) -> None:

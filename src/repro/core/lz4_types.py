@@ -49,6 +49,16 @@ class Sequence:
                 raise ValueError(f"offset {self.offset} out of range")
 
 
+def pad_pow2_count(count: int, cap: int) -> int:
+    """Micro-batch row count for `count` items: the full `cap` when the
+    batch is full, else the next power of two — so the number of compiled
+    batch shapes stays bounded by log2(cap) + 1.  Shared by the compress
+    and decode engines so their compile-shape bucketing cannot diverge."""
+    if count >= cap:
+        return cap
+    return min(cap, 1 << (count - 1).bit_length()) if count > 1 else 1
+
+
 def lit_ext_bytes(lit_len: int) -> int:
     """Number of literal-length extension bytes."""
     if lit_len < 15:

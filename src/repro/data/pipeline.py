@@ -6,7 +6,10 @@ disk go through the paper's engine and are decompressed on load through the
 parallel `LZ4DecodeEngine`.  With ``cache_shards=False`` the pipeline never
 materializes a whole shard: each batch row is fetched with
 `FrameReader.read_range`, decoding only the 64 KB blocks covering that row's
-token slice (the frame block table is the seek index).
+token slice (the frame block table is the seek index).  The ``decode_engine``
+parameter opts the whole pipeline into any executor — pass an
+``executor="device"`` engine and every shard decode / row fetch runs its
+copy phase inside the jit graph instead of host NumPy.
 
 Restart-friendliness: batches are a pure function of (step, host_id), so a
 resumed job consumes exactly the batches it would have seen (exactly-once per

@@ -2,7 +2,9 @@
 
 Kernels: fibhash.py (word build + Fibonacci hash), match_extend.py (bounded
 S2 match extension), emit_scatter.py (device-side byte emission — the write
-path's last stage, so compressed bytes never round-trip through host NumPy).
+path's last stage, so compressed bytes never round-trip through host NumPy),
+decode_wave.py (device-side plan execution — pointer-doubling source resolve
++ byte gather, the read path's mirror of emit_scatter).
 
 Layout per kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 dispatch wrappers), ref.py (pure-jnp oracles).  Validated with interpret=True

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.core.lz4_types import MIN_MATCH
 
 from . import ref
+from .decode_wave import decode_wave_pallas
 from .emit_scatter import TILE as EMIT_TILE
 from .emit_scatter import emit_scatter_pallas
 from .fibhash import TILE as HASH_TILE
@@ -162,3 +163,75 @@ def emit_bytes(block_i32, emit, pos, length, offset, n, out_cap: int,
         out = emit_scatter_pallas(block_i32, segp, fields, total[None])
         return out[:out_cap].astype(jnp.uint8), total
     return ref.emit_bytes_ref(block_i32, seg, fields, total), total
+
+
+def _span_map(starts, n_valid, out_cap: int):
+    """Covering-span index per output position (scatter + cummax fill).
+
+    The decode-side twin of `_emit_layout`'s seg map: scatter each live
+    span's slot id at its start (padding slots — index >= `n_valid` — are
+    routed to a dropped out-of-range position), then a cummax forward-fills
+    so every output byte knows the last span that started at or before it.
+    Returns (out_cap,) int32; -1 where no span has started yet.
+    """
+    S = starts.shape[0]
+    slot = jnp.arange(S, dtype=jnp.int32)
+    idx = jnp.where(slot < n_valid, starts, out_cap)
+    smap = jnp.zeros((out_cap,), jnp.int32).at[idx].max(slot + 1, mode="drop")
+    return jax.lax.cummax(smap) - 1
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("out_cap", "rounds", "use_pallas"))
+def decode_gather(blk_u8, lit_src, lit_dst, lit_len, match_dst, match_off,
+                  n_lit, n_match, out_size, out_cap: int,
+                  rounds: int, use_pallas: bool = False):
+    """Device-side block decode from a fixed-shape `DevicePlan`.
+
+    The read-path mirror of `emit_bytes`, same split of labour: the span
+    layout (scatter + cummax covering maps, gathers of per-span fields) is
+    XLA either way; `use_pallas` selects the Pallas pointer-doubling kernel
+    over the jnp fallback for the resolve + byte materialization.
+
+    blk_u8    : (B,) uint8 compressed-payload bytes, zeroed past the true
+                payload length (B is the static payload cap; uint8 so the
+                host->device upload moves payload bytes, not int32 lanes)
+    lit_*     : (L,) int32 literal-run arrays (src in block, dst in output,
+                length); rows >= `n_lit` are padding
+    match_*   : (M,) int32 match arrays (dst in output, back-offset); rows
+                >= `n_match` are padding
+    out_size  : scalar int32 decoded size (0 for padding rows of a batch)
+    out_cap   : static output buffer size (>= any usize, i.e. MAX_BLOCK)
+    rounds    : static pointer-doubling depth; `MAX_RESOLVE_ROUNDS` (16)
+                covers every valid block, fewer suffice when the plans'
+                `n_waves` say so
+
+    Returns (out_cap,) uint8 whose first `out_size` bytes are the decoded
+    block — bit-identical to `execute_plan` / `execute_device_plan` (the
+    host oracles) and safe under vmap (a stacked micro-batch of plans
+    decodes as one dispatch, exactly like the compress side).
+    """
+    blk_i32 = blk_u8.astype(jnp.int32)
+    L = lit_src.shape[0]
+    M = match_dst.shape[0]
+    k = jnp.arange(out_cap, dtype=jnp.int32)
+
+    li = _span_map(lit_dst, n_lit, out_cap)
+    mi = _span_map(match_dst, n_match, out_cap)
+    liC = jnp.clip(li, 0, L - 1)
+    lit_end = jnp.take(lit_dst, liC) + jnp.take(lit_len, liC)
+    is_lit = (li >= 0) & (k < lit_end)
+    in_range = k < out_size
+    moff = jnp.take(match_off, jnp.clip(mi, 0, M - 1))
+    # Literal bytes (and everything past out_size) are fixed points of the
+    # source map; match bytes point back by their covering match's offset.
+    ptr = jnp.where(is_lit | ~in_range, k, k - moff)
+    ptr = jnp.clip(ptr, 0, out_cap - 1)
+    lit_blk = jnp.where(is_lit, jnp.take(lit_src, liC) + (k - jnp.take(lit_dst, liC)), 0)
+
+    if use_pallas:
+        out = decode_wave_pallas(blk_i32, lit_blk, ptr,
+                                 jnp.asarray(out_size, jnp.int32)[None],
+                                 rounds=rounds)
+        return out.astype(jnp.uint8)
+    return ref.decode_gather_ref(blk_i32, lit_blk, ptr, out_size, rounds)

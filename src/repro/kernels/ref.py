@@ -109,3 +109,36 @@ def emit_bytes_ref(block, seg, fields, total):
         jnp.where(r == lit_end, off & 0xFF,
         jnp.where(r == lit_end + 1, (off >> 8) & 0xFF, mext_byte)))))
     return jnp.where(k < total, b, 0).astype(jnp.uint8)
+
+
+def decode_gather_ref(block, lit_blk, ptr, total, rounds: int):
+    """Device-side block decode: transitive-source resolve + ONE byte gather.
+
+    The read-path mirror of `emit_bytes_ref`: instead of executing match
+    copies in stream order (serial feedback through the output buffer),
+    every output byte k carries its IMMEDIATE source — itself for literal
+    bytes (a fixed point of the source map), ``k - offset`` for match
+    bytes — and the transitive source is resolved by pointer doubling:
+    after r rounds of ``ptr = ptr[ptr]`` every dependency chain of depth
+    <= 2^r terminates at a literal byte.  `rounds` is static (the decode
+    engine picks it from the micro-batch's plan depth, worst case
+    ceil(log2(MAX_BLOCK)) = 16), so the whole decode is `rounds` + 2
+    gathers with no data-dependent control flow — the shape GPULZ and
+    Sitaridi et al. reach for massively-parallel decompression.
+
+    block   : (B,) int32 byte values of the COMPRESSED block (zero-padded)
+    lit_blk : (K,) int32 per-output-byte literal source index into `block`
+              (valid where the byte's resolved pointer lands — i.e. at
+              literal positions; arbitrary elsewhere)
+    ptr     : (K,) int32 per-output-byte immediate source position
+    total   : scalar int32 decoded size; positions >= total emit 0
+
+    Returns (K,) uint8.  Bit-identical to `repro.core.decode_plan.
+    execute_plan` / `execute_device_plan` (asserted in tests).
+    """
+    K = ptr.shape[0]
+    k = jnp.arange(K, dtype=jnp.int32)
+    for _ in range(rounds):
+        ptr = jnp.take(ptr, ptr)
+    b = jnp.take(block, jnp.take(lit_blk, ptr))
+    return jnp.where(k < total, b, 0).astype(jnp.uint8)

@@ -427,6 +427,58 @@ def test_read_range_decodes_only_covering_blocks(engine, monkeypatch):
     assert len(planned) == 1
 
 
+def test_read_range_zero_length_everywhere(engine):
+    # Zero-length reads are valid at EVERY position 0..usize inclusive —
+    # including exactly at EOF — and must decode no blocks at all.
+    data = b"zero length " * 17000  # 3+ blocks
+    frame = engine.compress(data)
+    reader = FrameReader(frame, cache_blocks=0)
+    for start in (0, 1, MAX_BLOCK - 1, MAX_BLOCK, MAX_BLOCK + 1,
+                  len(data) - 1, len(data)):
+        assert reader.read_range(start, 0) == b""
+        assert reader.blocks_for_range(start, 0) == range(0, 0)
+    # The empty frame supports exactly the (0, 0) read.
+    empty = FrameReader(engine.compress(b""))
+    assert empty.usize == 0 and empty.read_range(0, 0) == b""
+    with pytest.raises(ValueError):
+        empty.read_range(0, 1)
+
+
+def test_read_range_past_eof_rejected(engine):
+    data = b"eof bounds " * 9000
+    reader = FrameReader(engine.compress(data))
+    n = len(data)
+    for start, length in [(n + 1, 0), (n, 1), (n - 1, 2), (0, n + 1),
+                          (n + 100, 5), (2 * n, 0)]:
+        with pytest.raises(ValueError, match="outside"):
+            reader.read_range(start, length)
+    # Bounds must hold for the seek index itself too.
+    with pytest.raises(ValueError):
+        reader.blocks_for_range(n, 1)
+
+
+def test_read_range_exact_block_boundaries(engine):
+    # Reads landing exactly on 64 KB block boundaries: a full single block
+    # must decode exactly that block, an exact multi-block span exactly
+    # those blocks, never a neighbour.
+    data = b"B" * (3 * MAX_BLOCK)  # 3 exact blocks, no partial tail
+    frame = engine.compress(data)
+    reader = FrameReader(frame, cache_blocks=0)
+    assert reader.block_count == 3
+    for i in range(3):
+        a, b = reader.block_range(i)
+        assert (a, b) == (i * MAX_BLOCK, (i + 1) * MAX_BLOCK)
+        assert reader.blocks_for_range(a, MAX_BLOCK) == range(i, i + 1)
+        assert reader.read_range(a, MAX_BLOCK) == data[a:b]
+    # Exact two-block span; and the one-byte-each straddle around an edge.
+    assert reader.blocks_for_range(MAX_BLOCK, 2 * MAX_BLOCK) == range(1, 3)
+    assert reader.read_range(MAX_BLOCK, 2 * MAX_BLOCK) == data[MAX_BLOCK:]
+    assert reader.blocks_for_range(MAX_BLOCK - 1, 2) == range(0, 2)
+    assert reader.read_range(MAX_BLOCK - 1, 2) == data[MAX_BLOCK - 1: MAX_BLOCK + 1]
+    # First byte of a block belongs to that block alone.
+    assert reader.blocks_for_range(2 * MAX_BLOCK, 1) == range(2, 3)
+
+
 def test_read_block_and_cache(engine):
     data = b"cached block reads " * 15000
     frame = engine.compress(data)
@@ -479,7 +531,8 @@ def test_v2_raw_block_checksummed():
 
     payload = b"raw but protected"
     frame = bytearray(encode_frame([payload], [len(payload)], [True],
-                                   checksums=[block_crc(payload)]))
+                                   checksums=[block_crc(payload)],
+                                   content_size=False))
     assert frame[4] == 2
     assert decode_frame(bytes(frame)) == payload
     frame[-1] ^= 0x01

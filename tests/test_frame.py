@@ -127,9 +127,10 @@ def test_frame_incompressible_uses_passthrough(engine):
     frame = engine.compress(data)
     info = frame_info(frame)
     assert [b["raw"] for b in info["blocks"]] == [True]
-    # Passthrough bounds expansion to the frame header + table (v2 entries
-    # are 12 bytes: usize, csize/flag, content crc32).
-    assert len(frame) == len(data) + 9 + 12
+    # Passthrough bounds expansion to the frame header + table (v3 header
+    # adds an 8-byte content size; entries are 12 bytes: usize, csize/flag,
+    # content crc32).
+    assert len(frame) == len(data) + 9 + 8 + 12
     assert decode_frame(frame) == data
 
 
@@ -176,10 +177,33 @@ def test_frame_rejects_trailing_garbage(engine):
 
 def test_frame_rejects_lying_usize(engine):
     frame = bytearray(_good_frame(engine))
-    # usize field of block 0 lives right after the 9-byte header.
-    frame[9:13] = (1199).to_bytes(4, "little")
+    # usize field of block 0 lives right after the 17-byte v3 header
+    # (9-byte base + 8-byte content size).
+    frame[17:21] = (1199).to_bytes(4, "little")
     with pytest.raises(FrameFormatError):
         decode_frame(bytes(frame))
+
+
+def test_frame_rejects_lying_content_size(engine):
+    # The v3 content-size header must match the block table BEFORE any
+    # payload is decoded.
+    frame = bytearray(_good_frame(engine))
+    assert frame[4] == 3
+    frame[9:17] = (12345).to_bytes(8, "little")
+    with pytest.raises(FrameFormatError, match="content size"):
+        frame_info(bytes(frame))
+
+
+def test_frame_v2_writer_still_available(engine):
+    # content_size=False reproduces the pre-v3 writer byte-for-byte shape.
+    data = b"versioned " * 50
+    from repro.core import block_crc
+
+    frame = encode_frame([data], [len(data)], [True],
+                         checksums=[block_crc(data)], content_size=False)
+    assert frame[4] == 2
+    assert decode_frame(frame) == data
+    assert frame_info(frame)["content_size"] is None
 
 
 def test_frame_rejects_raw_size_mismatch():

@@ -133,8 +133,9 @@ def test_block_swap_detected(frames):
             _assert_rejected(bytes(mutant), "multi: payload swap")
     # Swapping the crc fields of two different blocks must also trip.
     mutant = bytearray(frame)
-    e0 = 9 + 0 * 12
-    e1 = 9 + 1 * 12
+    table = 9 + 8  # v3 header: 9-byte base + 8-byte content size
+    e0 = table + 0 * 12
+    e1 = table + 1 * 12
     if mutant[e0 + 8: e0 + 12] != mutant[e1 + 8: e1 + 12]:
         mutant[e0 + 8: e0 + 12], mutant[e1 + 8: e1 + 12] = (
             mutant[e1 + 8: e1 + 12], mutant[e0 + 8: e0 + 12],
