@@ -38,7 +38,7 @@ def run(fast: bool = True) -> dict:
             repeat=3,
         )
         out[f"cpu_mbps_{impl}"] = round(MAX_BLOCK / dt / 1e6, 2)
-    for cand in ("sortkey", "scatter"):
+    for cand in ("sortkey", "scatter", "fused"):
         _, dt = timed(
             lambda: compress_block_records(
                 buf_j, n_j, scan_impl="associative", candidate_impl=cand

@@ -34,7 +34,9 @@ embarrassingly parallel (Sitaridi et al., arXiv 1606.00519):
                    `DecodeStats.host_bytes` counts exactly the decoded
                    bytes fetched back (or nothing, via
                    `decode_to_device` — the accelerator-to-accelerator
-                   restore path used by serving KV-offload).  Blocks whose
+                   restore path used by serving KV-offload, whose CRC
+                   verification also runs in-graph, so even verified
+                   restores fetch no content).  Blocks whose
                    plans overflow the fixed caps fall back to the host
                    executor per block (counted in `fallback_blocks`).
 
@@ -153,9 +155,11 @@ class DecodeStats:
     """Counters from the most recent decode call.
 
     ``host_bytes`` is the read-side twin of `EngineStats.host_bytes`: every
-    byte fetched device -> host by the "device" executor (exactly the
-    decoded payload — rows are slice-fetched to their true usize — or zero
-    for a `decode_to_device` restore that never leaves the accelerator).
+    CONTENT byte fetched device -> host by the "device" executor (exactly
+    the decoded payload — rows are slice-fetched to their true usize — or
+    zero for a `decode_to_device` restore, which never leaves the
+    accelerator: its CRC verification runs in-graph and syncs only a
+    4-byte checksum scalar, not counted here).
     """
 
     blocks: int = 0
@@ -435,14 +439,21 @@ class LZ4DecodeEngine:
         """Device-executor decode of (index, table-entry) frame blocks.
 
         ``to_device=True`` returns per-block DEVICE arrays (uint8) instead
-        of host bytes — nothing crosses the device->host boundary unless
-        ``verify`` needs the content for its CRC check (raw/fallback blocks
-        are uploaded host->device; `DecodeStats.host_bytes` stays the
-        download-only counter, mirroring `EngineStats`).
+        of host bytes — and the content NEVER crosses the device->host
+        boundary: with ``verify=True`` each block's CRC32 is computed
+        in-graph (slice-by-8, `kernels.ops.crc32_bytes`) and only the
+        4-byte checksum is fetched for comparison against the table
+        (raw/fallback blocks are uploaded host->device;
+        `DecodeStats.host_bytes` stays the download-only *content* counter,
+        mirroring `EngineStats`, so verified device restores keep it at 0).
         """
+        if to_device and verify:
+            from repro.kernels.ops import crc32_bytes  # already jitted
+
         meta = {}
         out: list = [None] * len(entries)
         jobs = []
+        pending_crc: list[tuple[int, object, int]] = []
         for j, (i, b) in enumerate(entries):
             payload = frame[b["offset"]: b["offset"] + b["csize"]]
             if b["raw"]:
@@ -476,14 +487,26 @@ class LZ4DecodeEngine:
         def finish(slot, payload, dp, row):
             i, b = meta[slot]
             dev = row[: dp.out_size]
-            if to_device and not verify:
+            if to_device:
+                # Size-vs-table parity was enforced at plan time; the CRC
+                # check runs in-graph so the content stays device-resident
+                # (only the 4-byte checksum comes home, uncounted by the
+                # content ledger `host_bytes`).  The checksum dispatch is
+                # asynchronous and the host compare is DEFERRED below, so
+                # verification never stalls the double-buffered drain.
+                if verify and b["crc"] is not None:
+                    pending_crc.append((i, crc32_bytes(row, dp.out_size),
+                                        b["crc"]))
                 out[slot] = dev
                 return
             data = self._fetch_row(row, dp.out_size)
             check_block(i, b["usize"], b["crc"], data)
-            out[slot] = dev if to_device else data
+            out[slot] = data
 
         self._execute_device(jobs, finish)
+        for i, got, want in pending_crc:
+            if int(got) != want:
+                raise FrameFormatError(f"block {i}: checksum mismatch")
         return out
 
     @staticmethod
@@ -518,12 +541,12 @@ class LZ4DecodeEngine:
         The accelerator-to-accelerator restore path: compressed blocks are
         uploaded, decoded in-graph, and concatenated on device, so a
         KV-offload restore never materializes the plaintext on the host.
-        ``verify=True`` (default) still fetches each block's content for
-        its CRC check — integrity over transfer symmetry; pass
-        ``verify=False`` to keep the loop fully device-resident (the frame
-        table's structural validation and the host planner's format checks
-        still run, only the content checksum is skipped — `host_bytes`
-        then stays 0 for compressed blocks).
+        ``verify=True`` (default) checks each block's CRC32 *on device*
+        (slice-by-8 table walk in-graph, `kernels.ops.crc32_bytes`) and
+        fetches only the 4-byte checksum for comparison — verified
+        restores keep `host_bytes` at 0 too; ``verify=False`` skips even
+        that scalar sync (the frame table's structural validation and the
+        host planner's format checks always run).
 
         Works on any engine instance (it always uses the device execution
         path, regardless of `executor`).
@@ -662,9 +685,10 @@ class FrameReader:
 
         Covering blocks are decoded in-graph (`_decode_entries_device`) and
         concatenated + sliced on device, so a KV-offload restore of one
-        request's slice never lands on the host (``verify=False`` skips the
-        CRC fetch too; see `LZ4DecodeEngine.decode_to_device`).  Bypasses
-        the host-bytes LRU — device buffers are the accelerator's to cache.
+        request's slice never lands on the host — including its CRC check,
+        which runs in-graph (``verify=False`` skips even the checksum
+        sync; see `LZ4DecodeEngine.decode_to_device`).  Bypasses the
+        host-bytes LRU — device buffers are the accelerator's to cache.
         """
         import jax.numpy as jnp
 

@@ -49,6 +49,7 @@ from .jax_compressor import (
     _PAD,
     compress_block_bytes,
     compress_block_records,
+    resolve_candidate_impl,
 )
 from .lz4_types import (
     DEFAULT_HASH_BITS,
@@ -98,6 +99,7 @@ class EngineStats:
     bytes_in: int = 0
     bytes_out: int = 0
     host_bytes: int = 0  # bytes fetched device -> host (records or emit buffers)
+    candidate_impl: str = ""  # the RESOLVED impl that ran ("auto" never runs)
 
 
 def _slice_payload(out: np.ndarray, j: int, size: int) -> bytes:
@@ -119,7 +121,7 @@ class LZ4Engine:
                  micro_batch: int = 32,
                  use_pallas: bool = False,
                  scan_impl: str = "sequential",
-                 candidate_impl: str = "sort",
+                 candidate_impl: str = "auto",
                  donate: bool | None = None,
                  device_emit: bool = True,
                  drain: str = "sliced"):
@@ -133,7 +135,13 @@ class LZ4Engine:
         self.micro_batch = micro_batch
         self.use_pallas = use_pallas
         self.scan_impl = scan_impl
-        self.candidate_impl = candidate_impl
+        # "auto" resolves ONCE, here, to the best impl for the active
+        # backend (sortkey on CPU — measured; scatter on GPU and on TPU
+        # without Pallas; fused on TPU with use_pallas) — the dispatch and
+        # the jit cache only ever see a concrete impl name, and
+        # EngineStats.candidate_impl records what actually ran.
+        self.candidate_impl = resolve_candidate_impl(candidate_impl,
+                                                     use_pallas=use_pallas)
         # Donation only pays (and only avoids a warning) off-CPU.
         self.donate = (jax.default_backend() != "cpu") if donate is None else donate
         # device_emit=True: byte emission stays in the jit graph; only the
@@ -182,7 +190,8 @@ class LZ4Engine:
         asynchronous).
         """
         chunks = [data[i: i + MAX_BLOCK] for i in range(0, len(data), MAX_BLOCK)]
-        self.stats = EngineStats(blocks=len(chunks), bytes_in=len(data))
+        self.stats = EngineStats(blocks=len(chunks), bytes_in=len(data),
+                                 candidate_impl=self.candidate_impl)
         inflight = None
         for start in range(0, len(chunks), self.micro_batch):
             batch = chunks[start: start + self.micro_batch]
@@ -267,7 +276,9 @@ class LZ4Engine:
         is valid LZ4 (no passthrough), lengths must travel out-of-band.
         """
         if not data:
-            self.stats = EngineStats(blocks=1)  # host-emitted empty block
+            # Host-emitted empty block: no dispatch, no candidate stage ran.
+            self.stats = EngineStats(blocks=1,
+                                     candidate_impl=self.candidate_impl)
             return [emit_block(b"", [], [], [], [], 0)]
         return [payload_fn() for _, _, _, payload_fn in self._payload_iter(data)]
 

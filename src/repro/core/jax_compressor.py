@@ -3,11 +3,18 @@
 This is the TPU-native re-expression of the hardware architecture in Fig. 5:
 
   Word Shift + Hash Calculation  -> kernels.ops.hash_positions (Pallas/jnp)
-  Hash Table (LVT, multi-port)   -> sort-based candidate resolution: because
-        every position is written every cycle and reads see previous-cycle
+  Hash Table (LVT, multi-port)   -> candidate resolution: because every
+        position is written every cycle and reads see previous-cycle
         state, cand(p) = max{q : hash(q)=hash(p), window(q)<window(p)} — a
-        per-bucket predecessor query solved with one argsort + segment ops,
-        O(log n) depth instead of an 8K-step sequential table walk.
+        per-bucket predecessor query.  Four bit-identical impls
+        (`candidate_impl`): "sort" (argsort + segment ops), "sortkey"
+        (packed-key sort), "scatter" (scatter-max + log-depth cummax, no
+        sort), and "fused" (the whole hash->LVT->match-extend datapath as
+        ONE Pallas kernel with a VMEM-resident table written/read in
+        window order — kernels/fused_compress.py; jnp twin
+        kernels/ref.fused_ref).  "auto" (the default) resolves per
+        backend (`resolve_candidate_impl`): the measured-fastest impl on
+        CPU, the expected accelerator shapes off-CPU.
   Match Searching                -> vectorized word compare (the table stores
         the 4-byte string; here: words[cand] == words[p])
   Extended Match (bounded, S2)   -> kernels.ops.match_lengths (fixed-depth)
@@ -51,6 +58,43 @@ from .lz4_types import (
 
 _PAD = 71  # block padding: max max_match (68) + 3 word-shift bytes
 
+# The candidate-resolution implementations selectable via `candidate_impl`
+# (all bit-identical at the match-record level; tests/test_lz4_jax.py,
+# tests/test_fused_compress.py).
+CANDIDATE_IMPLS = ("sort", "sortkey", "scatter", "fused")
+
+
+def resolve_candidate_impl(candidate_impl: str = "auto",
+                           backend: str | None = None,
+                           use_pallas: bool = False) -> str:
+    """Resolve ``"auto"`` to the best impl for a backend.
+
+    On CPU the choice is MEASURED (BENCH_engine_batched.json
+    `candidate_impl`, docs/tuning.md): the packed-key value sort wins
+    (~1.4x over argsort at micro_batch=32 — half the sort payload, no gathers; it also beats
+    scatter's 8 MB grid at every micro-batch on the reference container).
+    Off CPU the choices are the expected accelerator shapes, not yet
+    benchmarked on real hardware: the scatter-max formulation (log-depth
+    cummax, no sort) on GPU and on TPU without Pallas; with
+    ``use_pallas=True`` on TPU, the fused single-pass kernel that keeps
+    the whole datapath in VMEM.  "fused" is only auto-selected when the
+    Pallas kernel would actually run — its jnp twin is the scatter
+    formulation plus extra gathers, so auto-picking it without Pallas
+    would be strictly worse than "scatter".  Concrete impl names pass
+    through unchanged, so callers can always pin one.
+    """
+    if candidate_impl == "auto":
+        backend = backend or jax.default_backend()
+        if backend == "tpu":
+            return "fused" if use_pallas else "scatter"
+        return "scatter" if backend == "gpu" else "sortkey"
+    if candidate_impl not in CANDIDATE_IMPLS:
+        raise ValueError(
+            f"candidate_impl must be 'auto' or one of {CANDIDATE_IMPLS}, "
+            f"got {candidate_impl!r}"
+        )
+    return candidate_impl
+
 # Device-emit output buffer size per block.  The worst case compressed block
 # is literals-only: 1 token + 257 extension bytes + MAX_BLOCK literals =
 # MAX_BLOCK + 258; padded up to a lane-aligned multiple of the emit kernel's
@@ -78,21 +122,14 @@ def _candidates_scatter(hashes, n, hash_bits: int, pws: int):
     grid (this IS the hash table, materialized over time), exclusive cummax
     along the window axis (log-depth), then gather at (win(p), hash(p)).
     Identical output to _candidates; ~2.5x less memory traffic (see
-    EXPERIMENTS.md §Perf).
+    EXPERIMENTS.md §Perf).  The formulation itself lives in
+    `kernels.ref.scatter_candidates_ref` — it is also stage 2 of the fused
+    datapath's jnp twin, and sharing one definition keeps the staged impl
+    and the twin from drifting.
     """
-    P = hashes.shape[0]
-    E = 1 << hash_bits
-    p = jnp.arange(P, dtype=jnp.int32)
-    valid_pos = p <= n - MIN_MATCH
-    W = P // pws
-    win = p // pws
-    key = jnp.where(valid_pos, win * E + hashes, W * E)  # sentinel row dropped
-    table = jnp.zeros((W * E + 1,), jnp.int32).at[key].max(p + 1, mode="drop")
-    tm = table[: W * E].reshape(W, E)
-    run_max = jax.lax.associative_scan(jnp.maximum, tm, axis=0)
-    excl = jnp.concatenate([jnp.zeros((1, E), jnp.int32), run_max[:-1]], axis=0)
-    cand = excl[win, jnp.clip(hashes, 0, E - 1)] - 1
-    return jnp.where(valid_pos, cand, -1)
+    from repro.kernels.ref import scatter_candidates_ref
+
+    return scatter_candidates_ref(hashes, n, hash_bits, pws)
 
 
 def _candidates_sortkey(hashes, n, hash_bits: int, pws: int):
@@ -264,7 +301,7 @@ def compress_block_records(
     pws: int = DEFAULT_PWS,
     use_pallas: bool = False,
     scan_impl: str = "sequential",
-    candidate_impl: str = "sort",
+    candidate_impl: str = "auto",
 ) -> BlockRecords:
     """Compress one padded block; returns per-window match records + size.
 
@@ -272,26 +309,39 @@ def compress_block_records(
     n        : scalar int32 true length (0 <= n <= MAX_BLOCK)
     """
     assert block_u8.shape[0] == MAX_BLOCK + _PAD, block_u8.shape
+    candidate_impl = resolve_candidate_impl(candidate_impl,
+                                            use_pallas=use_pallas)
     block = block_u8.astype(jnp.int32)
     # Zero the padding region so it can never fake matches past n.
     idx = jnp.arange(block.shape[0], dtype=jnp.int32)
     block = jnp.where(idx < n, block, 0)
 
-    words, hashes = ops.hash_positions(block[: MAX_BLOCK + 3], hash_bits, use_pallas=use_pallas)
-    cand_fn = {
-        "sort": _candidates,
-        "sortkey": _candidates_sortkey,
-        "scatter": _candidates_scatter,
-    }[candidate_impl]
-    cand = cand_fn(hashes, n, hash_bits, pws)
-
     p = jnp.arange(MAX_BLOCK, dtype=jnp.int32)
-    has_cand = cand >= 0
-    wc = jnp.take(words, jnp.clip(cand, 0, MAX_BLOCK - 1))
-    valid4 = has_cand & (wc == words) & (p <= n - MF_LIMIT)
+    if candidate_impl == "fused":
+        # Single-pass datapath: hash, LVT candidate, word compare, and the
+        # bounded extension come back from ONE kernel (or its jnp twin) —
+        # no intermediate hash/word/candidate arrays round-trip through
+        # the graph, and no sort anywhere.
+        cand, lengths = ops.fused_match_candidates(
+            block, n, positions=MAX_BLOCK, hash_bits=hash_bits, pws=pws,
+            max_match=max_match, use_pallas=use_pallas,
+        )
+        valid = lengths >= MIN_MATCH
+    else:
+        words, hashes = ops.hash_positions(block[: MAX_BLOCK + 3], hash_bits, use_pallas=use_pallas)
+        cand_fn = {
+            "sort": _candidates,
+            "sortkey": _candidates_sortkey,
+            "scatter": _candidates_scatter,
+        }[candidate_impl]
+        cand = cand_fn(hashes, n, hash_bits, pws)
 
-    lengths = ops.match_lengths(block, cand, valid4, n, max_match=max_match, use_pallas=use_pallas)
-    valid = valid4 & (lengths >= MIN_MATCH)
+        has_cand = cand >= 0
+        wc = jnp.take(words, jnp.clip(cand, 0, MAX_BLOCK - 1))
+        valid4 = has_cand & (wc == words) & (p <= n - MF_LIMIT)
+
+        lengths = ops.match_lengths(block, cand, valid4, n, max_match=max_match, use_pallas=use_pallas)
+        valid = valid4 & (lengths >= MIN_MATCH)
 
     if scan_impl == "sequential":
         emit, pos, length = _select_sequential(valid, lengths, pws)
@@ -327,7 +377,7 @@ def compress_block_bytes(
     pws: int = DEFAULT_PWS,
     use_pallas: bool = False,
     scan_impl: str = "sequential",
-    candidate_impl: str = "sort",
+    candidate_impl: str = "auto",
     out_cap: int = OUT_CAP,
 ):
     """Compress one padded block to FINAL BYTES, entirely in-graph.
@@ -374,7 +424,7 @@ def compress_blocks_records(
     pws: int = DEFAULT_PWS,
     use_pallas: bool = False,
     scan_impl: str = "sequential",
-    candidate_impl: str = "sort",
+    candidate_impl: str = "auto",
 ) -> BlockRecords:
     fn = functools.partial(
         compress_block_records,

@@ -1,10 +1,16 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
-Kernels: fibhash.py (word build + Fibonacci hash), match_extend.py (bounded
-S2 match extension), emit_scatter.py (device-side byte emission — the write
-path's last stage, so compressed bytes never round-trip through host NumPy),
-decode_wave.py (device-side plan execution — pointer-doubling source resolve
-+ byte gather, the read path's mirror of emit_scatter).
+Kernels: fused_compress.py (the single-pass hash -> LVT candidate ->
+bounded-match datapath of paper Fig. 5, VMEM-resident table, grid-
+sequential window ordering — `candidate_impl="fused"`), fibhash.py (word
+build + Fibonacci hash), match_extend.py (bounded S2 match extension) —
+the two stages the fused kernel subsumes, kept as the staged path —
+emit_scatter.py (device-side byte emission — the write path's last stage,
+so compressed bytes never round-trip through host NumPy), decode_wave.py
+(device-side plan execution — pointer-doubling source resolve + byte
+gather, the read path's mirror of emit_scatter).  ops.py additionally
+carries `crc32_bytes`, the in-graph slice-by-8 CRC-32 that keeps verified
+device restores free of content fetches.
 
 Layout per kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 dispatch wrappers), ref.py (pure-jnp oracles).  Validated with interpret=True

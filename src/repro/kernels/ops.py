@@ -19,6 +19,7 @@ from .emit_scatter import TILE as EMIT_TILE
 from .emit_scatter import emit_scatter_pallas
 from .fibhash import TILE as HASH_TILE
 from .fibhash import fibhash_pallas
+from .fused_compress import fused_compress_pallas
 from .match_extend import TILE as EXT_TILE
 from .match_extend import match_extend_pallas
 
@@ -69,6 +70,34 @@ def match_lengths(block_i32, cand, valid, n, max_match: int = 36, use_pallas: bo
         )
         return out[:P]
     return ref.match_extend_ref(block_i32, cand, valid, n, max_match)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("positions", "hash_bits", "pws", "max_match", "use_pallas"),
+)
+def fused_match_candidates(block_i32, n, positions: int, hash_bits: int = 8,
+                           pws: int = 8, max_match: int = 36,
+                           use_pallas: bool = False):
+    """Fused hash -> LVT candidate -> bounded-match datapath (no sort).
+
+    block_i32 : (B,) int32 byte values, zeroed past `n`; B >= positions +
+                max_match (the padded compressor block)
+    n         : scalar int32 true block length
+    positions : static position count P
+
+    Returns ``(cand, lengths)``, both (P,) int32: the LVT candidate per
+    position (-1 where none) and the full bounded match length (0 where no
+    valid match).  `use_pallas` selects the single-pass VMEM-resident
+    kernel (fused_compress.py, grid-sequential LVT) over the whole-block
+    jnp twin (ref.fused_ref); both are elementwise-identical.
+    """
+    if use_pallas:
+        return fused_compress_pallas(
+            block_i32, jnp.asarray(n, jnp.int32)[None], positions,
+            hash_bits=hash_bits, pws=pws, max_match=max_match,
+        )
+    return ref.fused_ref(block_i32, n, positions, hash_bits, pws, max_match)
 
 
 def _ext_len(v):
@@ -235,3 +264,71 @@ def decode_gather(blk_u8, lit_src, lit_dst, lit_len, match_dst, match_off,
                                  rounds=rounds)
         return out.astype(jnp.uint8)
     return ref.decode_gather_ref(blk_i32, lit_blk, ptr, out_size, rounds)
+
+
+@functools.lru_cache(maxsize=1)
+def _crc_slice8_tables():
+    """The 8 x 256 slice-by-8 lookup tables for CRC-32 (IEEE, reflected —
+    zlib/binascii-compatible).  Built once on host; embedded in the graph
+    as a constant so the checksum runs device-side."""
+    import numpy as np
+
+    poly = 0xEDB88320
+    t = np.zeros((8, 256), np.uint32)
+    for i in range(256):
+        c = i
+        for _ in range(8):
+            c = (c >> 1) ^ (poly if c & 1 else 0)
+        t[0, i] = c
+    for k in range(1, 8):
+        prev = t[k - 1]
+        t[k] = (prev >> 8) ^ t[0, prev & 0xFF]
+    return t
+
+
+@jax.jit
+def crc32_bytes(data_u8, n):
+    """CRC-32 of ``data_u8[:n]``, entirely in-graph (slice-by-8).
+
+    data_u8 : (K,) uint8 buffer (content past `n` is ignored)
+    n       : scalar int32 byte count, 0 <= n <= K
+
+    Returns a () uint32 equal to ``binascii.crc32(bytes(data_u8[:n]))`` —
+    the frame's `block_crc`.  Each scan step folds 8 bytes through the
+    precomputed tables (the standard slice-by-8 formulation); a masked
+    byte-serial variant of the same step handles the ragged tail, so `n`
+    stays a traced value and one compiled graph covers every block size.
+    Used by the decode engine so `decode_to_device(verify=True)` can check
+    integrity WITHOUT fetching the decoded payload to the host.
+    """
+    K = data_u8.shape[0]
+    pad = (-K) % 8
+    d = data_u8.astype(jnp.uint32)
+    if pad:
+        d = jnp.concatenate([d, jnp.zeros((pad,), jnp.uint32)])
+    chunks = d.reshape(-1, 8)
+    T = jnp.asarray(_crc_slice8_tables())
+    n = jnp.asarray(n, jnp.int32)
+
+    def step(crc, xs):
+        chunk, s = xs
+        base = s * 8
+        # Full chunk: fold 4 bytes into the running crc, then one table
+        # lookup per byte of the 8-byte slice.
+        x = crc ^ (chunk[0] | (chunk[1] << 8) | (chunk[2] << 16)
+                   | (chunk[3] << 24))
+        full = (T[7, x & 0xFF] ^ T[6, (x >> 8) & 0xFF]
+                ^ T[5, (x >> 16) & 0xFF] ^ T[4, (x >> 24) & 0xFF]
+                ^ T[3, chunk[4]] ^ T[2, chunk[5]]
+                ^ T[1, chunk[6]] ^ T[0, chunk[7]])
+        # Ragged tail: the same 8 bytes one at a time, each masked by n.
+        c = crc
+        for j in range(8):
+            upd = T[0, (c ^ chunk[j]) & 0xFF] ^ (c >> 8)
+            c = jnp.where(base + j < n, upd, c)
+        return jnp.where(base + 8 <= n, full, c), None
+
+    steps = jnp.arange(chunks.shape[0], dtype=jnp.int32)
+    crc0 = jnp.uint32(0xFFFFFFFF)
+    crc, _ = jax.lax.scan(step, crc0, (chunks, steps))
+    return crc ^ jnp.uint32(0xFFFFFFFF)

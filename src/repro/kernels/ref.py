@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.lz4_types import HASH_PRIME, MIN_MATCH, LAST_LITERALS
+from repro.core.lz4_types import HASH_PRIME, MF_LIMIT, MIN_MATCH, LAST_LITERALS
 
 # Row layout of the per-sequence `fields` array consumed by the emit kernels
 # (`emit_bytes_ref` here, `emit_scatter.py` on the Pallas path).  One column
@@ -58,6 +58,69 @@ def match_extend_ref(block, cand, valid, n, max_match: int):
         prefix = prefix & (cur == cnd) & (j < max_extra)
         length = length + prefix.astype(jnp.int32)
     return jnp.where(valid, MIN_MATCH + length, 0)
+
+
+def scatter_candidates_ref(hashes, n, hash_bits: int, pws: int):
+    """Scatter-max LVT candidate resolution (no sort).
+
+    cand(p) = max{q : hash(q)=hash(p), win(q)<win(p)}: scatter positions
+    into a (windows x entries) grid — the hash table materialized over
+    time — exclusive cummax along the window axis (log-depth), gather at
+    (win(p), hash(p)).  The single source of this formulation, shared by
+    `fused_ref` below and `jax_compressor._candidates_scatter`
+    (candidate_impl="scatter"), so the twin and the staged impl cannot
+    drift.  Returns (P,) int32, -1 where no candidate/invalid position.
+    """
+    import jax
+
+    P = hashes.shape[0]
+    E = 1 << hash_bits
+    p = jnp.arange(P, dtype=jnp.int32)
+    valid_pos = p <= n - MIN_MATCH
+    W = P // pws
+    win = p // pws
+    key = jnp.where(valid_pos, win * E + hashes, W * E)  # sentinel row dropped
+    table = jnp.zeros((W * E + 1,), jnp.int32).at[key].max(p + 1, mode="drop")
+    tm = table[: W * E].reshape(W, E)
+    run_max = jax.lax.associative_scan(jnp.maximum, tm, axis=0)
+    excl = jnp.concatenate([jnp.zeros((1, E), jnp.int32), run_max[:-1]], axis=0)
+    cand = excl[win, jnp.clip(hashes, 0, E - 1)] - 1
+    return jnp.where(valid_pos, cand, -1)
+
+
+def fused_ref(block, n, positions: int, hash_bits: int, pws: int,
+              max_match: int):
+    """jnp twin of the fused compression datapath (fused_compress.py).
+
+    One expression of hash -> LVT candidate -> word compare -> bounded
+    extension, with candidate resolution in the scatter-max formulation
+    (NO sort): scatter positions into a (windows x entries) grid — the
+    hash table materialized over time — exclusive cummax along the window
+    axis, gather at (win(p), hash(p)).  Pinned bit-identical to the
+    `_candidates` sort oracle at the match-record level, and elementwise
+    equal to the Pallas kernel's (cand, lengths) outputs
+    (tests/test_fused_compress.py).
+
+    block     : (B,) int32 byte values, zeroed past `n`; B >= positions +
+                max_match (the padded compressor block)
+    n         : scalar int32 true block length
+    positions : static position count P (P % pws == 0)
+
+    Returns ``(cand, lengths)``: (P,) int32 candidate position (-1 where
+    none/invalid) and full match length (0 where no valid match).
+    """
+    P = positions
+    b0 = block[:P]
+    b1 = block[1 : P + 1]
+    b2 = block[2 : P + 2]
+    b3 = block[3 : P + 3]
+    words, hashes = fibhash_ref(b0, b1, b2, b3, hash_bits)
+    p = jnp.arange(P, dtype=jnp.int32)
+    cand = scatter_candidates_ref(hashes, n, hash_bits, pws)
+    wc = jnp.take(words, jnp.clip(cand, 0, P - 1))
+    valid4 = (cand >= 0) & (wc == words) & (p <= n - MF_LIMIT)
+    lengths = match_extend_ref(block, cand, valid4, n, max_match)
+    return cand, lengths
 
 
 def emit_bytes_ref(block, seg, fields, total):

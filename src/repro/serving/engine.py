@@ -132,10 +132,12 @@ def restore_cache(obj, decode_engine=None, to_device: bool = False,
     ``to_device=True`` routes each frame through the decode engine's
     device executor (`decode_to_device`): blocks are decompressed inside
     the jit graph and the restored leaves are assembled as device arrays.
-    With the default ``verify=True`` each block's content is still fetched
-    host-side for its CRC check; pass ``verify=False`` to defer integrity
-    to the caller and keep the restore fully accelerator-to-accelerator —
-    zero plaintext bytes cross to the host (`DecodeStats.host_bytes` 0).
+    The restore is fully accelerator-to-accelerator either way — with the
+    default ``verify=True`` each block's CRC32 is computed in-graph
+    (`kernels.ops.crc32_bytes`) and only the 4-byte checksum is synced for
+    comparison, so zero plaintext bytes cross to the host
+    (`DecodeStats.host_bytes` 0); ``verify=False`` skips even that scalar
+    sync and defers integrity to the caller.
     """
     treedef, blobs = obj
     eng = decode_engine or default_decode_engine()
@@ -162,12 +164,12 @@ class OffloadedCacheReader:
 
     ``to_device=True`` makes every read return DEVICE arrays: the covering
     blocks are decompressed inside the jit graph (the decode engine's
-    device executor) and sliced/reshaped on the accelerator.  Combined
-    with ``verify=False`` (CRC deferred to the caller) this is the
+    device executor) and sliced/reshaped on the accelerator — the
     accelerator-to-accelerator path a production serving fleet wants
-    between offload tiers — zero plaintext bytes cross to the host; the
-    default ``verify=True`` still fetches each block's content for its
-    checksum before handing back the device array.
+    between offload tiers, with zero plaintext bytes crossing to the host.
+    The default ``verify=True`` keeps that property: each block's CRC32
+    runs in-graph and only the 4-byte checksum is synced for comparison;
+    ``verify=False`` defers integrity to the caller and skips the sync.
 
     >>> rdr = OffloadedCacheReader(blob)
     >>> rdr.read_leaf(3, start=128, count=64)   # 64 elements, ~1 block decoded

@@ -16,8 +16,10 @@
     host execution per block (counted, still bit-identical);
   * the accelerator-to-accelerator restore path: `decode_to_device`,
     `FrameReader.read_range_device`, and `OffloadedCacheReader(
-    to_device=True)` return device arrays with zero device->host traffic
-    when verification is deferred.
+    to_device=True)` return device arrays with zero device->host content
+    traffic — since PR 5 even with ``verify=True``, whose CRC32 runs
+    in-graph (`kernels.ops.crc32_bytes`) and syncs only a 4-byte checksum;
+    corrupt content must still be rejected exactly like the serial oracle.
 """
 import numpy as np
 import pytest
@@ -343,15 +345,46 @@ def test_decode_to_device_matches_and_transfers_nothing(engine, device_engine):
     dev = device_engine.decode_to_device(frame)
     assert isinstance(dev, jax.Array)
     assert np.asarray(dev).tobytes() == data
-    # verify=False: the compressed->decoded loop never touches the host.
+    # verify=True checks CRCs IN-GRAPH (slice-by-8, ops.crc32_bytes): the
+    # decoded content itself never crosses to the host even when verified.
+    assert device_engine.stats.host_bytes == 0
+    # verify=False: additionally skips the per-block checksum sync.
     dev2 = device_engine.decode_to_device(frame, verify=False)
     assert device_engine.stats.host_bytes == 0
     assert np.asarray(dev2).tobytes() == data
-    # Corruption still raises when verification is on.
+    # Corruption still raises when verification is on — caught by the
+    # device-computed checksum, without fetching the content.
     mutant = bytearray(frame)
     mutant[-3] ^= 0x08
     with pytest.raises(FrameFormatError):
         device_engine.decode_to_device(bytes(mutant))
+
+
+def test_decode_to_device_crc_parity_with_serial_oracle(engine, device_engine):
+    # Payload byte flips through the VERIFIED device restore must behave
+    # exactly like the serial oracle: reject, or (harmless-flip corner)
+    # decode to the identical bytes — all without fetching content.
+    data = b"device crc parity " * 7000
+    frame = engine.compress(data)
+    n = len(frame)
+    payload_start = n // 2  # well past the header/table, inside payloads
+    for pos in range(payload_start, n, max(1, n // 25)):
+        mutant = bytearray(frame)
+        mutant[pos] ^= 0x40
+        mutant = bytes(mutant)
+        try:
+            oracle = decode_frame_serial(mutant)
+        except FrameFormatError:
+            oracle = None
+        try:
+            got = np.asarray(
+                device_engine.decode_to_device(mutant)).tobytes()
+        except FrameFormatError:
+            assert oracle is None, f"device rejected, oracle accepted @ {pos}"
+            continue
+        assert oracle is not None, f"device accepted, oracle rejected @ {pos}"
+        assert got == oracle, pos
+        assert device_engine.stats.host_bytes == 0
 
 
 def test_decode_to_device_rejects_lying_usize_without_verify(device_engine):
