@@ -1,4 +1,19 @@
-"""Shared helpers for the benchmark harness (one module per paper table)."""
+"""Shared helpers for the benchmark harness (one module per paper table).
+
+Timing discipline (normalized across every benchmarks/*.py module):
+
+  * `time.perf_counter` for ALL wall-clock intervals (monotonic,
+    high-resolution; never `time.time`);
+  * best-of-N over INTERLEAVED or repeated reps via `timed` / `timed_best`;
+  * every JSON written through `save_json` carries a ``schema_version``
+    plus ``wall_time_s`` / ``process_time_s`` (elapsed since benchmark
+    start) so BENCH_*.json files are machine-diffable across PRs — a
+    schema bump means the shape of the payload changed, not just numbers.
+
+Telemetry: `dump_telemetry(name)` exports the `repro.obs` trace/metrics
+bundle to experiments/telemetry/<name>/ when ``REPRO_OBS`` is on (the
+artifact `tools/trace_report.py` consumes); it is a no-op otherwise.
+"""
 from __future__ import annotations
 
 import json
@@ -11,6 +26,16 @@ from repro.core import corpus_blocks, corpus_files, plan_size
 from repro.core.lz4_types import Sequence
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "benchmarks")
+TELEMETRY_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                             "telemetry")
+
+# Bump when the shape of a benchmark JSON changes (not its numbers).
+BENCH_SCHEMA_VERSION = 2
+
+# Process-start-ish origin for the wall/process elapsed fields: importing
+# benchmarks.common is the first thing every benchmark module does.
+_T0_WALL = time.perf_counter()
+_T0_PROC = time.process_time()
 
 ENTRY_SWEEP = [64, 128, 256, 512, 1024, 2048, 4096, 8192]
 
@@ -37,6 +62,16 @@ def corpus_ratio(compress_fn, blocks: list[bytes]) -> float:
 
 
 def save_json(name: str, obj) -> str:
+    """Write a benchmark JSON, stamping the machine-diffable header fields.
+
+    Mutates ``obj`` in place (schema_version / wall_time_s / process_time_s)
+    so callers that mirror the same dict elsewhere — the BENCH_*.json root
+    copies — carry identical headers.
+    """
+    if isinstance(obj, dict):
+        obj["schema_version"] = BENCH_SCHEMA_VERSION
+        obj["wall_time_s"] = round(time.perf_counter() - _T0_WALL, 3)
+        obj["process_time_s"] = round(time.process_time() - _T0_PROC, 3)
     os.makedirs(OUT_DIR, exist_ok=True)
     path = os.path.join(OUT_DIR, f"{name}.json")
     with open(path, "w") as f:
@@ -52,3 +87,29 @@ def timed(fn, *args, repeat: int = 3, **kw):
         out = fn(*args, **kw)
         ts.append(time.perf_counter() - t0)
     return out, min(ts)
+
+
+def timed_best(fn, repeat: int) -> float:
+    """Best-of-`repeat` wall time of `fn()` after one warmup call (the
+    shared form of the per-module `_timed` helpers)."""
+    fn()  # warmup / jit
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def dump_telemetry(name: str) -> dict | None:
+    """Export the obs trace/metrics bundle for this benchmark run.
+
+    Writes experiments/telemetry/<name>/{trace.json,events.jsonl,
+    metrics.json,metrics.prom} when telemetry is enabled (``REPRO_OBS=1``);
+    returns the path map, or None when telemetry is off.
+    """
+    from repro import obs
+
+    if not obs.is_enabled():
+        return None
+    return obs.dump_artifacts(os.path.join(TELEMETRY_DIR, name))

@@ -47,7 +47,13 @@ from repro.core import (
 )
 from repro.core.lz4_types import MAX_BLOCK
 
-from .common import save_json
+if __package__ in (None, ""):        # `python benchmarks/decode_parallel.py`
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from common import dump_telemetry, save_json
+else:
+    from .common import dump_telemetry, save_json
 
 
 def _corpus(n_blocks: int) -> bytes:
@@ -182,6 +188,10 @@ def run(fast: bool = True) -> dict:
                         "BENCH_decode_parallel.json")
     with open(root, "w") as f:
         json.dump(out, f, indent=1)
+    # With REPRO_OBS=1: export the read-path trace/metrics bundle
+    # (plan/execute/verify spans across every executor) for
+    # tools/trace_report.py; no-op otherwise.
+    dump_telemetry("decode_parallel")
     return out
 
 

@@ -34,7 +34,13 @@ import time
 from repro.core import LZ4Engine, decode_frame
 from repro.core.lz4_types import MAX_BLOCK
 
-from .common import save_json
+if __package__ in (None, ""):        # `python benchmarks/engine_batched.py`
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from common import dump_telemetry, save_json, timed_best
+else:
+    from .common import dump_telemetry, save_json, timed_best
 
 BATCH_SIZES = (1, 8, 32, 128)
 
@@ -47,14 +53,7 @@ def _corpus(n_blocks: int) -> bytes:
     return b"".join((full * reps)[:n_blocks])
 
 
-def _timed(fn, repeat: int):
-    fn()  # warmup / jit
-    best = float("inf")
-    for _ in range(repeat):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-    return best
+_timed = timed_best
 
 
 def run(fast: bool = True) -> dict:
@@ -215,6 +214,10 @@ def run(fast: bool = True) -> dict:
     root = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine_batched.json")
     with open(root, "w") as f:
         json.dump(out, f, indent=1)
+    # With REPRO_OBS=1: export the write-path trace/metrics bundle
+    # (dispatch/wait/drain spans, engine.* counters, block-ratio histogram)
+    # for tools/trace_report.py; no-op otherwise.
+    dump_telemetry("engine_batched")
     return out
 
 

@@ -28,10 +28,12 @@ import json
 import os
 import shutil
 import threading
+import time
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core.decode_engine import default_decode_engine
 from repro.core.decoder import LZ4FormatError
 from repro.core.engine import default_engine
@@ -79,37 +81,52 @@ def save(ckpt_dir: str, step: int, tree, *, compress: bool = True,
          async_write: bool = False, keep_last: int = 3):
     """Write a checkpoint. Returns the final path (or a Thread if async)."""
     # Snapshot synchronously (cheap device_get), write possibly in background.
-    leaves = [(p, np.asarray(jax.device_get(x))) for p, x in _flatten(tree)]
+    with obs.span("checkpoint.snapshot", step=step):
+        leaves = [(p, np.asarray(jax.device_get(x))) for p, x in _flatten(tree)]
 
     def _write():
+        t0 = time.perf_counter()
+        raw_total = 0
         final = os.path.join(ckpt_dir, f"ckpt_{step}")
         tmp = final + ".tmp"
-        os.makedirs(tmp, exist_ok=True)
-        manifest = {"step": step, "leaves": []}
-        with open(os.path.join(tmp, "data.bin"), "wb") as f:
-            for path, arr in leaves:
-                raw = arr.tobytes()
-                blocks, _ = _compress_leaf(raw, compress)
-                entry = {
-                    "path": path,
-                    "shape": list(arr.shape),
-                    "dtype": str(arr.dtype),
-                    "raw_size": len(raw),
-                    "crc32": binascii.crc32(raw) & 0xFFFFFFFF,
-                    "blocks": [],
-                }
-                for is_comp, data in blocks:
-                    entry["blocks"].append(
-                        {"offset": f.tell(), "size": len(data), "lz4": bool(is_comp)}
-                    )
-                    f.write(data)
-                manifest["leaves"].append(entry)
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)
-        _cleanup(ckpt_dir, keep_last)
+        with obs.span("checkpoint.save", step=step, leaves=len(leaves)):
+            os.makedirs(tmp, exist_ok=True)
+            manifest = {"step": step, "leaves": []}
+            with open(os.path.join(tmp, "data.bin"), "wb") as f:
+                for path, arr in leaves:
+                    raw = arr.tobytes()
+                    raw_total += len(raw)
+                    blocks, _ = _compress_leaf(raw, compress)
+                    entry = {
+                        "path": path,
+                        "shape": list(arr.shape),
+                        "dtype": str(arr.dtype),
+                        "raw_size": len(raw),
+                        "crc32": binascii.crc32(raw) & 0xFFFFFFFF,
+                        "blocks": [],
+                    }
+                    for is_comp, data in blocks:
+                        entry["blocks"].append(
+                            {"offset": f.tell(), "size": len(data), "lz4": bool(is_comp)}
+                        )
+                        f.write(data)
+                    manifest["leaves"].append(entry)
+                data_bytes = f.tell()
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            _cleanup(ckpt_dir, keep_last)
+        if obs.is_enabled():
+            obs.counter("checkpoint.saves", "checkpoints written").inc()
+            obs.counter("checkpoint.save_bytes_raw",
+                        "leaf bytes snapshotted").inc(raw_total)
+            obs.counter("checkpoint.save_bytes_written",
+                        "data.bin bytes written").inc(data_bytes)
+            obs.histogram("checkpoint.save_seconds",
+                          help="checkpoint write latency").observe(
+                time.perf_counter() - t0)
         return final
 
     if async_write:
@@ -151,6 +168,7 @@ def restore(ckpt_dir: str, step: int, like, shardings=None,
     ``executor="device"`` to run block decompression inside the jit graph
     (plan on host, execute on accelerator) instead of in host NumPy.
     """
+    t0 = time.perf_counter()
     eng = decode_engine or default_decode_engine()
     final = os.path.join(ckpt_dir, f"ckpt_{step}")
     man_path = os.path.join(final, "manifest.json")
@@ -161,7 +179,8 @@ def restore(ckpt_dir: str, step: int, like, shardings=None,
     by_path = {e["path"]: e for e in manifest["leaves"]}
     data_path = os.path.join(final, "data.bin")
     out_leaves = {}
-    with open(data_path, "rb") as f:
+    raw_total = 0
+    with obs.span("checkpoint.restore", step=step), open(data_path, "rb") as f:
         for path, spec in _flatten(like):
             if path not in by_path:
                 raise CheckpointError(f"leaf {path} not in checkpoint")
@@ -181,10 +200,19 @@ def restore(ckpt_dir: str, step: int, like, shardings=None,
                 raw = b"".join(eng.decode_blocks(payloads, raws))
             except LZ4FormatError as err:
                 raise CheckpointError(f"corrupt block in {path}: {err}") from err
-            if binascii.crc32(bytes(raw)) & 0xFFFFFFFF != e["crc32"]:
-                raise CheckpointError(f"checksum mismatch for {path}")
+            with obs.span("decode.verify", leaf=path):
+                if binascii.crc32(bytes(raw)) & 0xFFFFFFFF != e["crc32"]:
+                    raise CheckpointError(f"checksum mismatch for {path}")
+            raw_total += len(raw)
             arr = np.frombuffer(bytes(raw), dtype=np.dtype(e["dtype"])).reshape(e["shape"])
             out_leaves[path] = arr
+    if obs.is_enabled():
+        obs.counter("checkpoint.restores", "checkpoints restored").inc()
+        obs.counter("checkpoint.restore_bytes_raw",
+                    "leaf bytes restored").inc(raw_total)
+        obs.histogram("checkpoint.restore_seconds",
+                      help="checkpoint restore latency").observe(
+            time.perf_counter() - t0)
 
     def rebuild(tree, path=""):
         if isinstance(tree, dict):

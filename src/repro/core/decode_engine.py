@@ -63,6 +63,8 @@ from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
+from repro import obs
+
 from .decode_plan import (
     MAX_RESOLVE_ROUNDS,
     DevicePlanCaps,
@@ -116,33 +118,61 @@ def default_decode_engine() -> "LZ4DecodeEngine":
     return LZ4DecodeEngine()
 
 
-def _decode_planned(payload: bytes, cap: int) -> bytes:
-    """Two-phase decode of one block (plan once, execute in bulk)."""
-    plan = plan_block_fast(payload, max_out=cap)
-    return execute_plan(payload, plan).tobytes()
+def _decode_planned(payload: bytes, cap: int, sp=None) -> bytes:
+    """Two-phase decode of one block (plan once, execute in bulk).
+
+    ``sp`` is an optional span factory (`obs.span_factory`) so the plan and
+    execute phases show up as separate trace stages when telemetry is on.
+    """
+    if sp is None:
+        plan = plan_block_fast(payload, max_out=cap)
+        return execute_plan(payload, plan).tobytes()
+    with sp("decode.plan", bytes_in=len(payload)):
+        plan = plan_block_fast(payload, max_out=cap)
+    with sp("decode.execute", bytes_out=plan.usize):
+        return execute_plan(payload, plan).tobytes()
+
+
+def _decode_one(payload: bytes, cap, two_phase: bool, ob: bool):
+    """One block through the selected per-block decoder, traced when on.
+
+    Spans recorded in thread-pool workers land in the shared tracer
+    (per-thread buffers); spans in PROCESS-pool workers die with the child
+    — the process executor is traced at the `decode.total` level only.
+    """
+    if not ob:
+        return (_decode_planned(payload, cap) if two_phase
+                else decode_block(payload, cap))
+    sp = obs.span_factory(True)
+    if two_phase:
+        return _decode_planned(payload, cap, sp)
+    with sp("decode.execute", bytes_in=len(payload), fused=True):
+        return decode_block(payload, cap)
 
 
 def _frame_block_task(args) -> bytes:
     """Decode + verify one frame block (runs in a worker for thread/process
     executors; module-level so it pickles for the process pool)."""
-    payload, usize, crc, index, two_phase = args
+    payload, usize, crc, index, two_phase, ob = args
     try:
-        decode = _decode_planned if two_phase else decode_block
-        data = decode(payload, usize)
+        data = _decode_one(payload, usize, two_phase, ob)
     except FrameFormatError:
         raise
     except LZ4FormatError as e:
         raise FrameFormatError(f"block {index}: {e}") from e
-    check_block(index, usize, crc, data)
+    if ob:
+        with obs.span_factory(True)("decode.verify", block=index):
+            check_block(index, usize, crc, data)
+    else:
+        check_block(index, usize, crc, data)
     return data
 
 
 def _plain_block_task(args) -> bytes:
     """Decode one raw LZ4 block (no framing, no checksum)."""
-    payload, usize, index, two_phase = args
+    payload, usize, index, two_phase, ob = args
     cap = usize if usize is not None else MAX_BLOCK
-    decode = _decode_planned if two_phase else decode_block
-    data = decode(payload, cap)
+    data = _decode_one(payload, cap, two_phase, ob)
     if usize is not None and len(data) != usize:
         raise LZ4FormatError(
             f"block {index}: decoded {len(data)} bytes, expected {usize}"
@@ -152,7 +182,16 @@ def _plain_block_task(args) -> bytes:
 
 @dataclasses.dataclass
 class DecodeStats:
-    """Counters from the most recent decode call.
+    """Per-call counters (PLUS a lifetime accumulator on the engine).
+
+    Lifecycle — ``engine.stats`` is REPLACED at the start of every
+    `decode` / `decode_blocks` / `decode_to_device` call: it describes the
+    most recent call only (and `FrameReader` reads, which go through the
+    engine's `_decode_entries*` internals WITHOUT a reset, increment the
+    counters of whatever call came last).  For anything that must survive
+    across calls use ``engine.totals``, the cumulative sum merged in as
+    each public call finishes (even on error) — or the ``decode.*``
+    counters in `repro.obs.registry()` when telemetry is on.
 
     ``host_bytes`` is the read-side twin of `EngineStats.host_bytes`: every
     CONTENT byte fetched device -> host by the "device" executor (exactly
@@ -171,6 +210,19 @@ class DecodeStats:
     device_blocks: int = 0     # blocks decoded inside the jit graph
     fallback_blocks: int = 0   # device executor blocks decoded on host
     host_bytes: int = 0        # bytes fetched device -> host
+    calls: int = 0             # 1 per finished call (totals.calls sums them)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def accumulate(self, other: "DecodeStats") -> None:
+        """Fold ``other`` (one finished call) into this accumulator."""
+        for f in ("blocks", "raw_blocks", "bytes_in", "bytes_out",
+                  "dispatches", "device_blocks", "fallback_blocks",
+                  "host_bytes"):
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+        self.parallel = self.parallel or other.parallel
+        self.calls += max(other.calls, 1)
 
 
 class LZ4DecodeEngine:
@@ -190,7 +242,8 @@ class LZ4DecodeEngine:
                  min_parallel_blocks: int = 2, two_phase: bool | None = None,
                  micro_batch: int = 8, use_pallas: bool = False,
                  caps: DevicePlanCaps | None = None,
-                 adaptive_rounds: bool = True):
+                 adaptive_rounds: bool = True,
+                 telemetry: bool | None = None):
         if executor is not None and executor not in _EXECUTORS:
             raise ValueError(f"executor must be one of {_EXECUTORS}")
         if workers is not None and workers < 1:
@@ -221,9 +274,39 @@ class LZ4DecodeEngine:
         # inline, two-phase in workers.  Both are bit-identical (tested).
         self.two_phase = (self.executor != "serial") if two_phase is None \
             else two_phase
-        self.stats = DecodeStats()
+        # Telemetry: None follows the global `repro.obs` gate at call time;
+        # True/False pins this instance (never changes decoded bytes).
+        self.telemetry = telemetry
+        self.stats = DecodeStats()      # most recent call (see DecodeStats)
+        self.totals = DecodeStats()     # lifetime accumulator
         self._pool = None
         self._pool_lock = threading.Lock()
+
+    def _obs_on(self) -> bool:
+        return obs.enabled_for(self.telemetry)
+
+    def _finish_call(self) -> None:
+        """Fold the finished call's stats into `totals` + the obs registry."""
+        s = self.stats
+        s.calls = 1
+        self.totals.accumulate(s)
+        if self._obs_on():
+            r = obs.registry()
+            r.counter("decode.calls", "decode calls").inc()
+            r.counter("decode.blocks", "frame blocks decoded").inc(s.blocks)
+            r.counter("decode.raw_blocks",
+                      "raw-passthrough blocks").inc(s.raw_blocks)
+            r.counter("decode.bytes_in", "compressed bytes in").inc(s.bytes_in)
+            r.counter("decode.bytes_out", "decoded bytes out").inc(s.bytes_out)
+            r.counter("decode.dispatches",
+                      "device-executor jit dispatches").inc(s.dispatches)
+            r.counter("decode.device_blocks",
+                      "blocks decoded inside jit").inc(s.device_blocks)
+            r.counter("decode.fallback_blocks",
+                      "device-executor blocks decoded on host "
+                      "(plan overflowed DevicePlanCaps)").inc(s.fallback_blocks)
+            r.counter("decode.host_bytes",
+                      "content bytes fetched device -> host").inc(s.host_bytes)
 
     # -- worker pool --------------------------------------------------------
 
@@ -294,6 +377,16 @@ class LZ4DecodeEngine:
             blocks=len(payloads), raw_blocks=sum(map(bool, raws)),
             bytes_in=sum(len(p) for p in payloads),
         )
+        try:
+            with obs.span_factory(self._obs_on())(
+                    "decode.total", blocks=len(payloads),
+                    executor=self.executor):
+                return self._decode_blocks_inner(payloads, raws, usizes)
+        finally:
+            self._finish_call()
+
+    def _decode_blocks_inner(self, payloads, raws, usizes) -> list[bytes]:
+        ob = self._obs_on()
         out: list[bytes | None] = [None] * len(payloads)
         if self.executor == "device":
             jobs = []
@@ -328,7 +421,7 @@ class LZ4DecodeEngine:
                 else:
                     jobs.append((i, (bytes(payload),
                                      usizes[i] if usizes is not None else None,
-                                     i, self.two_phase)))
+                                     i, self.two_phase, ob)))
             for (i, _), data in zip(jobs, self._map(_plain_block_task,
                                                     [j for _, j in jobs])):
                 out[i] = data
@@ -342,14 +435,16 @@ class LZ4DecodeEngine:
         fixed-shape DevicePlan.  Returns (plan, dplan-or-None); a None
         dplan means the plan overflowed the caps and this block must
         execute on host (the per-block fallback, counted by the caller)."""
-        plan = plan_block_fast(payload, max_out=cap)
-        if len(payload) > self.caps.blk_cap:
-            return plan, None
-        try:
-            return plan, to_device_plan(plan, self.caps,
-                                        compute_waves=self.adaptive_rounds)
-        except DevicePlanOverflow:
-            return plan, None
+        with obs.span_factory(self._obs_on())(
+                "decode.plan", bytes_in=len(payload), executor="device"):
+            plan = plan_block_fast(payload, max_out=cap)
+            if len(payload) > self.caps.blk_cap:
+                return plan, None
+            try:
+                return plan, to_device_plan(
+                    plan, self.caps, compute_waves=self.adaptive_rounds)
+            except DevicePlanOverflow:
+                return plan, None
 
     def _dispatch_device(self, batch: list):
         """ONE vmapped jit dispatch for a micro-batch of (payload, dplan).
@@ -360,6 +455,7 @@ class LZ4DecodeEngine:
         """
         import jax.numpy as jnp
 
+        sp = obs.span_factory(self._obs_on())
         caps = self.caps
         m = pad_pow2_count(len(batch), self.micro_batch)
         blk = np.zeros((m, caps.blk_cap), np.uint8)
@@ -377,9 +473,11 @@ class LZ4DecodeEngine:
                                      self.use_pallas)
         self.stats.dispatches += 1
         self.stats.device_blocks += len(batch)
-        return fn(jnp.asarray(blk), *(jnp.asarray(a) for a in lit),
-                  *(jnp.asarray(a) for a in mat),
-                  *(jnp.asarray(a) for a in scal))
+        with sp("decode.execute", rows=len(batch), executor="device",
+                rounds=rounds):
+            return fn(jnp.asarray(blk), *(jnp.asarray(a) for a in lit),
+                      *(jnp.asarray(a) for a in mat),
+                      *(jnp.asarray(a) for a in scal))
 
     def _execute_device(self, jobs: list, finish) -> None:
         """Micro-batched, double-buffered device execution.
@@ -406,8 +504,11 @@ class LZ4DecodeEngine:
 
     def _fetch_row(self, row, usize: int) -> bytes:
         """Slice-fetch exactly `usize` decoded bytes of one output row
-        (the transfer the host_bytes counter measures)."""
-        data = np.asarray(row[:usize]).tobytes()
+        (the transfer the host_bytes counter measures).  The span doubles
+        as the device-wait measurement: the fetch synchronizes on the
+        dispatched decode graph."""
+        with obs.span_factory(self._obs_on())("decode.drain", bytes=usize):
+            data = np.asarray(row[:usize]).tobytes()
         self.stats.host_bytes += usize
         return data
 
@@ -418,16 +519,19 @@ class LZ4DecodeEngine:
         """Decode the given (index, table-entry) frame blocks, in order."""
         if self.executor == "device":
             return self._decode_entries_device(frame, entries)
+        ob = self._obs_on()
+        sp = obs.span_factory(ob)
         out: list[bytes | None] = [None] * len(entries)
         jobs = []
         for j, (i, b) in enumerate(entries):
             payload = frame[b["offset"]: b["offset"] + b["csize"]]
             if b["raw"]:
-                check_block(i, b["usize"], b["crc"], payload)
+                with sp("decode.verify", block=i, raw=True):
+                    check_block(i, b["usize"], b["crc"], payload)
                 out[j] = payload
             else:
                 jobs.append((j, (payload, b["usize"], b["crc"], i,
-                                 self.two_phase)))
+                                 self.two_phase, ob)))
         for (j, _), data in zip(jobs, self._map(_frame_block_task,
                                                 [a for _, a in jobs])):
             out[j] = data
@@ -450,6 +554,7 @@ class LZ4DecodeEngine:
         if to_device and verify:
             from repro.kernels.ops import crc32_bytes  # already jitted
 
+        sp = obs.span_factory(self._obs_on())
         meta = {}
         out: list = [None] * len(entries)
         jobs = []
@@ -457,7 +562,8 @@ class LZ4DecodeEngine:
         for j, (i, b) in enumerate(entries):
             payload = frame[b["offset"]: b["offset"] + b["csize"]]
             if b["raw"]:
-                check_block(i, b["usize"], b["crc"], payload)
+                with sp("decode.verify", block=i, raw=True):
+                    check_block(i, b["usize"], b["crc"], payload)
                 out[j] = self._host_result(payload, to_device)
                 continue
             try:
@@ -477,8 +583,10 @@ class LZ4DecodeEngine:
                 )
             if dplan is None:
                 self.stats.fallback_blocks += 1
-                data = execute_plan(payload, plan).tobytes()
-                check_block(i, b["usize"], b["crc"], data)
+                with sp("decode.execute", block=i, fallback=True):
+                    data = execute_plan(payload, plan).tobytes()
+                with sp("decode.verify", block=i):
+                    check_block(i, b["usize"], b["crc"], data)
                 out[j] = self._host_result(data, to_device)
                 continue
             meta[j] = (i, b)
@@ -500,13 +608,15 @@ class LZ4DecodeEngine:
                 out[slot] = dev
                 return
             data = self._fetch_row(row, dp.out_size)
-            check_block(i, b["usize"], b["crc"], data)
+            with sp("decode.verify", block=i):
+                check_block(i, b["usize"], b["crc"], data)
             out[slot] = data
 
         self._execute_device(jobs, finish)
-        for i, got, want in pending_crc:
-            if int(got) != want:
-                raise FrameFormatError(f"block {i}: checksum mismatch")
+        with sp("decode.verify", blocks=len(pending_crc), in_graph=True):
+            for i, got, want in pending_crc:
+                if int(got) != want:
+                    raise FrameFormatError(f"block {i}: checksum mismatch")
         return out
 
     @staticmethod
@@ -530,10 +640,16 @@ class LZ4DecodeEngine:
             raw_blocks=sum(b["raw"] for b in blocks),
             bytes_in=len(frame),
         )
-        parts = self._decode_entries(frame, list(enumerate(blocks)))
-        out = b"".join(parts)
-        self.stats.bytes_out = len(out)
-        return out
+        try:
+            with obs.span_factory(self._obs_on())(
+                    "decode.total", blocks=len(blocks),
+                    executor=self.executor):
+                parts = self._decode_entries(frame, list(enumerate(blocks)))
+                out = b"".join(parts)
+            self.stats.bytes_out = len(out)
+            return out
+        finally:
+            self._finish_call()
 
     def decode_to_device(self, frame: bytes, verify: bool = True):
         """Frame -> decoded bytes as ONE device uint8 array (no host copy).
@@ -560,12 +676,19 @@ class LZ4DecodeEngine:
             raw_blocks=sum(b["raw"] for b in blocks),
             bytes_in=len(frame),
         )
-        parts = self._decode_entries_device(
-            frame, list(enumerate(blocks)), to_device=True, verify=verify)
-        self.stats.bytes_out = sum(b["usize"] for b in blocks)
-        if not parts:
-            return jnp.zeros((0,), jnp.uint8)
-        return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        try:
+            with obs.span_factory(self._obs_on())(
+                    "decode.total", blocks=len(blocks), executor="device",
+                    to_device=True, verify=verify):
+                parts = self._decode_entries_device(
+                    frame, list(enumerate(blocks)), to_device=True,
+                    verify=verify)
+            self.stats.bytes_out = sum(b["usize"] for b in blocks)
+            if not parts:
+                return jnp.zeros((0,), jnp.uint8)
+            return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        finally:
+            self._finish_call()
 
 
 class FrameReader:

@@ -43,6 +43,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 from .emitter import emit_block
 from .frame import block_crc, decode_frame, encode_frame
 from .jax_compressor import (
@@ -91,7 +93,15 @@ def _batched_compiled(hash_bits, max_match, pws, use_pallas, scan_impl,
 
 @dataclasses.dataclass
 class EngineStats:
-    """Counters from the most recent `compress` call."""
+    """Per-call counters (PLUS a lifetime accumulator on the engine).
+
+    ``engine.stats`` is replaced at the start of every `compress` /
+    `compress_to_blocks` call — it describes the MOST RECENT call only.
+    ``engine.totals`` is the cumulative sum over the engine's lifetime
+    (merged in as each call finishes, even on error); use it — or the
+    ``engine.*`` counters in `repro.obs.registry()` when telemetry is on —
+    for anything that must survive across calls.
+    """
 
     blocks: int = 0
     dispatches: int = 0
@@ -100,6 +110,19 @@ class EngineStats:
     bytes_out: int = 0
     host_bytes: int = 0  # bytes fetched device -> host (records or emit buffers)
     candidate_impl: str = ""  # the RESOLVED impl that ran ("auto" never runs)
+    calls: int = 0  # 1 per finished call (so totals.calls counts calls)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def accumulate(self, other: "EngineStats") -> None:
+        """Fold ``other`` (one finished call) into this accumulator."""
+        for f in ("blocks", "dispatches", "raw_blocks", "bytes_in",
+                  "bytes_out", "host_bytes"):
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+        self.calls += max(other.calls, 1)
+        if other.candidate_impl:
+            self.candidate_impl = other.candidate_impl
 
 
 def _slice_payload(out: np.ndarray, j: int, size: int) -> bytes:
@@ -124,7 +147,8 @@ class LZ4Engine:
                  candidate_impl: str = "auto",
                  donate: bool | None = None,
                  device_emit: bool = True,
-                 drain: str = "sliced"):
+                 drain: str = "sliced",
+                 telemetry: bool | None = None):
         if micro_batch < 1:
             raise ValueError("micro_batch must be >= 1")
         if drain not in ("sliced", "full"):
@@ -155,7 +179,34 @@ class LZ4Engine:
         # buffer per micro-batch in one transfer (fewer, larger copies; the
         # pre-two-step behaviour, kept measurable in benchmarks).
         self.drain = drain
-        self.stats = EngineStats()
+        # Telemetry: None follows the global `repro.obs` gate (REPRO_OBS /
+        # obs.configure) at CALL time; True/False pins this instance.  The
+        # resolved flag never changes frame bytes — it only decides whether
+        # spans/metrics are recorded (tested byte-identical either way).
+        self.telemetry = telemetry
+        self.stats = EngineStats()      # most recent call (see EngineStats)
+        self.totals = EngineStats()     # lifetime accumulator
+        self._sp = obs.span_factory(False)  # refreshed per call
+
+    def _obs_on(self) -> bool:
+        return obs.enabled_for(self.telemetry)
+
+    def _finish_call(self) -> None:
+        """Fold the finished call's stats into `totals` + the obs registry."""
+        s = self.stats
+        s.calls = 1
+        self.totals.accumulate(s)
+        if self._obs_on():
+            r = obs.registry()
+            r.counter("engine.calls", "compress calls").inc()
+            r.counter("engine.blocks", "64 KB blocks compressed").inc(s.blocks)
+            r.counter("engine.raw_blocks",
+                      "blocks stored as raw passthrough").inc(s.raw_blocks)
+            r.counter("engine.dispatches", "jit dispatches").inc(s.dispatches)
+            r.counter("engine.bytes_in", "input bytes").inc(s.bytes_in)
+            r.counter("engine.bytes_out", "frame bytes out").inc(s.bytes_out)
+            r.counter("engine.host_bytes",
+                      "bytes fetched device -> host").inc(s.host_bytes)
 
     # -- dispatch -----------------------------------------------------------
 
@@ -167,17 +218,20 @@ class LZ4Engine:
             self.device_emit,
         )
         self.stats.dispatches += 1
-        return fn(jnp.asarray(stack), jnp.asarray(ns))
+        with self._sp("compress.dispatch", rows=len(ns),
+                      impl=self.candidate_impl):
+            return fn(jnp.asarray(stack), jnp.asarray(ns))
 
     def _pad_batch(self, chunks: list[bytes]) -> tuple[np.ndarray, np.ndarray]:
         """Stack chunks into a fixed-shape micro-batch (padded rows get n=0)."""
-        m = pad_pow2_count(len(chunks), self.micro_batch)
-        stack = np.zeros((m, MAX_BLOCK + _PAD), np.uint8)
-        ns = np.zeros((m,), np.int32)
-        for j, c in enumerate(chunks):
-            stack[j, : len(c)] = np.frombuffer(c, np.uint8)
-            ns[j] = len(c)
-        return stack, ns
+        with self._sp("compress.pad", blocks=len(chunks)):
+            m = pad_pow2_count(len(chunks), self.micro_batch)
+            stack = np.zeros((m, MAX_BLOCK + _PAD), np.uint8)
+            ns = np.zeros((m,), np.int32)
+            for j, c in enumerate(chunks):
+                stack[j, : len(c)] = np.frombuffer(c, np.uint8)
+                ns[j] = len(c)
+            return stack, ns
 
     def _payload_iter(self, data: bytes):
         """Yield (chunk, n, size, payload_fn) per block.
@@ -192,21 +246,37 @@ class LZ4Engine:
         chunks = [data[i: i + MAX_BLOCK] for i in range(0, len(data), MAX_BLOCK)]
         self.stats = EngineStats(blocks=len(chunks), bytes_in=len(data),
                                  candidate_impl=self.candidate_impl)
+        ob = self._obs_on()
+        self._sp = obs.span_factory(ob)
+        occupancy = obs.registry().gauge(
+            "engine.inflight_batches",
+            "micro-batches dispatched but not yet drained (double buffer)",
+        ) if ob else obs.NOOP_METRIC
         inflight = None
         for start in range(0, len(chunks), self.micro_batch):
             batch = chunks[start: start + self.micro_batch]
             stack, ns = self._pad_batch(batch)
             res = self._dispatch(stack, ns)
+            occupancy.inc()
             if inflight is not None:
+                # Double-buffer overlap: batch i drains while i+1 computes.
+                if ob:
+                    obs.registry().counter(
+                        "engine.overlapped_dispatches",
+                        "dispatches issued while the previous batch was "
+                        "still in flight").inc()
                 yield from self._drain(*inflight)
+                occupancy.dec()
             inflight = (batch, res)
         if inflight is not None:
             yield from self._drain(*inflight)
+            occupancy.dec()
 
     def _fetch_sliced(self, out_dev, j: int, size: int) -> bytes:
         """Slice-fetch exactly `size` compressed bytes of row j (the device
         slice executes on-device; only the payload crosses to host)."""
-        data = np.asarray(out_dev[j, :size]).tobytes()
+        with self._sp("compress.drain", bytes=size):
+            data = np.asarray(out_dev[j, :size]).tobytes()
         self.stats.host_bytes += size
         return data
 
@@ -218,22 +288,28 @@ class LZ4Engine:
                 # caller stores as raw passthrough (size >= n) never fetch
                 # their emit buffer at all.
                 out_dev, size_dev = res
-                size = jax.device_get(size_dev)
+                # The device_get is the sync point: its span measures how
+                # long the host WAITS on device compute (the rest of the
+                # drain is host-side transfer/assembly).
+                with self._sp("compress.wait", rows=len(batch)):
+                    size = jax.device_get(size_dev)
                 self.stats.host_bytes += size.nbytes
                 for j, chunk in enumerate(batch):
                     s = int(size[j])
                     yield chunk, len(chunk), s, functools.partial(
                         self._fetch_sliced, out_dev, j, s)
                 return
-            out, size = jax.device_get(res)
+            with self._sp("compress.wait", rows=len(batch)):
+                out, size = jax.device_get(res)
             self.stats.host_bytes += out.nbytes + size.nbytes
             for j, chunk in enumerate(batch):
                 s = int(size[j])
                 yield chunk, len(chunk), s, functools.partial(_slice_payload, out, j, s)
         else:
-            emit, pos, length, offset, size = jax.device_get(
-                (res.emit, res.pos, res.length, res.offset, res.size)
-            )
+            with self._sp("compress.wait", rows=len(batch)):
+                emit, pos, length, offset, size = jax.device_get(
+                    (res.emit, res.pos, res.length, res.offset, res.size)
+                )
             self.stats.host_bytes += (emit.nbytes + pos.nbytes + length.nbytes
                                       + offset.nbytes + size.nbytes)
             for j, chunk in enumerate(batch):
@@ -251,23 +327,39 @@ class LZ4Engine:
         the raw size are stored as raw passthrough, so worst-case expansion
         is the frame header, not LZ4's literal-run overhead.
         """
-        payloads, usizes, raws, crcs = [], [], [], []
-        for chunk, n, size, payload_fn in self._payload_iter(data):
-            if size >= n:
-                payloads.append(chunk)
-                raws.append(True)
-                self.stats.raw_blocks += 1
-            else:
-                payloads.append(payload_fn())
-                raws.append(False)
-            usizes.append(n)
-            # Content checksum over the ORIGINAL chunk (only the compressor
-            # ever sees it): makes the frame a version-2, integrity-checked
-            # container — decode verifies per block.
-            crcs.append(block_crc(chunk))
-        frame = encode_frame(payloads, usizes, raws, checksums=crcs)
-        self.stats.bytes_out = len(frame)
-        return frame
+        ob = self._obs_on()
+        sp = obs.span_factory(ob)
+        ratio_hist = obs.registry().histogram(
+            "engine.block_ratio", obs.DEFAULT_RATIO_BUCKETS,
+            "per-block compression ratio usize/csize (raw blocks -> 1.0)",
+        ) if ob else None
+        try:
+            with sp("compress.total", bytes_in=len(data)):
+                payloads, usizes, raws, crcs = [], [], [], []
+                for chunk, n, size, payload_fn in self._payload_iter(data):
+                    if size >= n:
+                        payloads.append(chunk)
+                        raws.append(True)
+                        self.stats.raw_blocks += 1
+                        if ratio_hist is not None and n:
+                            ratio_hist.observe(1.0)
+                    else:
+                        payloads.append(payload_fn())
+                        raws.append(False)
+                        if ratio_hist is not None and size:
+                            ratio_hist.observe(n / size)
+                    usizes.append(n)
+                    # Content checksum over the ORIGINAL chunk (only the
+                    # compressor ever sees it): makes the frame a version-2,
+                    # integrity-checked container — decode verifies per block.
+                    crcs.append(block_crc(chunk))
+                with sp("compress.frame", blocks=len(payloads)):
+                    frame = encode_frame(payloads, usizes, raws,
+                                         checksums=crcs)
+                self.stats.bytes_out = len(frame)
+                return frame
+        finally:
+            self._finish_call()
 
     def compress_to_blocks(self, data: bytes) -> list[bytes]:
         """bytes -> list of raw LZ4 blocks (one per 64 KB, no framing).
@@ -279,8 +371,17 @@ class LZ4Engine:
             # Host-emitted empty block: no dispatch, no candidate stage ran.
             self.stats = EngineStats(blocks=1,
                                      candidate_impl=self.candidate_impl)
+            self._finish_call()
             return [emit_block(b"", [], [], [], [], 0)]
-        return [payload_fn() for _, _, _, payload_fn in self._payload_iter(data)]
+        try:
+            with obs.span_factory(self._obs_on())(
+                    "compress.total", bytes_in=len(data), framing=False):
+                blocks = [payload_fn() for _, _, _, payload_fn
+                          in self._payload_iter(data)]
+            self.stats.bytes_out = sum(len(b) for b in blocks)
+            return blocks
+        finally:
+            self._finish_call()
 
     def decompress(self, frame: bytes) -> bytes:
         """Inverse of `compress`; validates the frame (sizes + checksums)

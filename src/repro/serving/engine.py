@@ -12,10 +12,13 @@ from __future__ import annotations
 
 import dataclasses
 
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.core.decode_engine import FrameReader, default_decode_engine
 from repro.core.engine import default_engine
@@ -60,15 +63,17 @@ class ServingEngine:
                 (B, self.cfg.vision_tokens, self.cfg.d_model),
                 jnp.dtype(self.cfg.compute_dtype),
             )
-        cache, logits = self._prefill(self.params, batch, self.cfg, self.cache_len)
+        with obs.span("serving.prefill", batch=B, max_prompt=max_p):
+            cache, logits = self._prefill(self.params, batch, self.cfg, self.cache_len)
         outs = [[] for _ in reqs]
         steps = max(r.max_new_tokens for r in reqs)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        for _ in range(steps):
-            for i in range(B):
-                outs[i].append(int(tok[i]))
-            logits, cache = self._decode(self.params, cache, tok, cache["pos"], self.cfg)
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        with obs.span("serving.decode_loop", batch=B, steps=steps):
+            for _ in range(steps):
+                for i in range(B):
+                    outs[i].append(int(tok[i]))
+                logits, cache = self._decode(self.params, cache, tok, cache["pos"], self.cfg)
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
         for r, o in zip(reqs, outs):
             r.output = o[: r.max_new_tokens]
 
@@ -94,24 +99,37 @@ def offload_cache(cache) -> tuple[list, dict]:
     blocks ride the frame's raw-passthrough flag — no out-of-band `lz4`
     markers or per-block length lists needed.
     """
-    leaves, treedef = jax.tree.flatten(cache)
-    blobs = []
-    raw_total = comp_total = 0
-    for leaf in leaves:
-        arr = np.asarray(leaf)
-        raw = arr.tobytes()
-        if len(raw) >= 1024:
-            frame = default_engine().compress(raw)
-        elif raw:
-            # Tiny leaf: a raw single-block frame, no kernel dispatch.
-            frame = encode_frame([raw], [len(raw)], [True], checksums=[block_crc(raw)])
-        else:
-            frame = encode_frame([], [], [], checksums=[])
-        blobs.append({"shape": arr.shape, "dtype": str(arr.dtype), "frame": frame})
-        raw_total += len(raw)
-        comp_total += len(frame)
+    t0 = time.perf_counter()
+    with obs.span("serving.offload"):
+        leaves, treedef = jax.tree.flatten(cache)
+        blobs = []
+        raw_total = comp_total = 0
+        for leaf in leaves:
+            arr = np.asarray(leaf)
+            raw = arr.tobytes()
+            if len(raw) >= 1024:
+                frame = default_engine().compress(raw)
+            elif raw:
+                # Tiny leaf: a raw single-block frame, no kernel dispatch.
+                frame = encode_frame([raw], [len(raw)], [True], checksums=[block_crc(raw)])
+            else:
+                frame = encode_frame([], [], [], checksums=[])
+            blobs.append({"shape": arr.shape, "dtype": str(arr.dtype), "frame": frame})
+            raw_total += len(raw)
+            comp_total += len(frame)
     stats = {"raw": raw_total, "compressed": comp_total,
              "ratio": raw_total / max(comp_total, 1)}
+    if obs.is_enabled():
+        obs.counter("serving.offloads", "cache offloads").inc()
+        obs.counter("serving.offload_bytes_raw",
+                    "serialized cache bytes in").inc(raw_total)
+        obs.counter("serving.offload_bytes_compressed",
+                    "frame bytes out").inc(comp_total)
+        obs.histogram("serving.offload_seconds",
+                      help="offload_cache latency").observe(
+            time.perf_counter() - t0)
+        obs.histogram("serving.offload_ratio", obs.DEFAULT_RATIO_BUCKETS,
+                      "whole-cache compression ratio").observe(stats["ratio"])
     return [treedef, blobs], stats
 
 
@@ -139,18 +157,26 @@ def restore_cache(obj, decode_engine=None, to_device: bool = False,
     (`DecodeStats.host_bytes` 0); ``verify=False`` skips even that scalar
     sync and defers integrity to the caller.
     """
+    t0 = time.perf_counter()
     treedef, blobs = obj
     eng = decode_engine or default_decode_engine()
     leaves = []
-    for b in blobs:
-        if to_device:
-            raw = eng.decode_to_device(b["frame"], verify=verify)
-            leaves.append(_device_view(raw, np.dtype(b["dtype"]), b["shape"]))
-        else:
-            raw = eng.decode(b["frame"])
-            leaves.append(jnp.asarray(
-                np.frombuffer(raw, np.dtype(b["dtype"])).reshape(b["shape"])))
-    return jax.tree.unflatten(treedef, leaves)
+    with obs.span("serving.restore", leaves=len(blobs), to_device=to_device):
+        for b in blobs:
+            if to_device:
+                raw = eng.decode_to_device(b["frame"], verify=verify)
+                leaves.append(_device_view(raw, np.dtype(b["dtype"]), b["shape"]))
+            else:
+                raw = eng.decode(b["frame"])
+                leaves.append(jnp.asarray(
+                    np.frombuffer(raw, np.dtype(b["dtype"])).reshape(b["shape"])))
+        tree = jax.tree.unflatten(treedef, leaves)
+    if obs.is_enabled():
+        obs.counter("serving.restores", "cache restores").inc()
+        obs.histogram("serving.restore_seconds",
+                      help="restore_cache latency").observe(
+            time.perf_counter() - t0)
+    return tree
 
 
 class OffloadedCacheReader:
@@ -218,13 +244,23 @@ class OffloadedCacheReader:
             count = total - start
         if start < 0 or count < 0 or start + count > total:
             raise ValueError(f"slice [{start}, {start + count}) outside leaf of {total}")
-        if self._to_device:
-            raw = self._reader(i).read_range_device(
-                start * dtype.itemsize, count * dtype.itemsize,
-                verify=self._verify)
-            return _device_view(raw, dtype, (count,))
-        raw = self.read_leaf_bytes(i, start * dtype.itemsize, count * dtype.itemsize)
-        return np.frombuffer(raw, dtype)
+        t0 = time.perf_counter()
+        with obs.span("serving.read_leaf", leaf=i, count=count,
+                      to_device=self._to_device):
+            if self._to_device:
+                raw = self._reader(i).read_range_device(
+                    start * dtype.itemsize, count * dtype.itemsize,
+                    verify=self._verify)
+                out = _device_view(raw, dtype, (count,))
+            else:
+                raw = self.read_leaf_bytes(i, start * dtype.itemsize,
+                                           count * dtype.itemsize)
+                out = np.frombuffer(raw, dtype)
+        if obs.is_enabled():
+            obs.histogram("serving.read_leaf_seconds",
+                          help="partial-restore (resume) read latency"
+                          ).observe(time.perf_counter() - t0)
+        return out
 
     def restore(self):
         """Full pytree restore (equivalent to `restore_cache`)."""

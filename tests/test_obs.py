@@ -1,0 +1,431 @@
+"""Telemetry layer: span tracing, metrics registry, exporters, no-op cost.
+
+Covers the `repro.obs` contract end to end:
+
+  * span nesting (depth/parent reconstruction) and thread-safety under a
+    ThreadPoolExecutor;
+  * Chrome trace-event export shape (Perfetto-loadable: "X" events with
+    numeric ts/dur in microseconds, M metadata rows);
+  * histogram quantile estimates vs `np.percentile` (error bounded by one
+    bucket width);
+  * Prometheus text exposition golden test (cumulative buckets, +Inf,
+    sanitized names);
+  * the disabled path: no events recorded, frames byte-identical with
+    telemetry on vs off, and a <2% overhead guard on a compress microloop;
+  * EngineStats/DecodeStats lifecycle: per-call `stats` vs lifetime
+    `totals`, `as_dict()` round-trips;
+  * `tools/trace_report.py` round-trip over a real exported bundle.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs.metrics import (
+    Histogram,
+    MetricsRegistry,
+    exponential_buckets,
+    linear_buckets,
+)
+from repro.obs.trace import Tracer
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+import trace_report  # noqa: E402
+
+
+@pytest.fixture
+def enabled_obs():
+    """Enable telemetry for one test, restoring prior state after."""
+    was = obs.is_enabled()
+    obs.configure(enabled=True)
+    obs.reset()
+    yield obs
+    obs.reset()
+    obs.configure(enabled=was)
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_depth_and_parent():
+    tr = Tracer()
+    with tr.span("outer"):
+        with tr.span("mid"):
+            with tr.span("inner"):
+                pass
+        with tr.span("mid2"):
+            pass
+    done = {e["name"]: e for e in tr.finished()}
+    assert done["outer"]["depth"] == 0 and done["outer"]["parent"] is None
+    assert done["mid"]["depth"] == 1 and done["mid"]["parent"] == "outer"
+    assert done["inner"]["depth"] == 2 and done["inner"]["parent"] == "mid"
+    assert done["mid2"]["depth"] == 1 and done["mid2"]["parent"] == "outer"
+    # Children close before parents, and fit inside them.
+    assert done["inner"]["dur_ns"] <= done["outer"]["dur_ns"]
+
+
+def test_span_records_args_and_duration():
+    tr = Tracer()
+    with tr.span("work", rows=7, impl="sort"):
+        time.sleep(0.002)
+    (ev,) = tr.finished()
+    assert ev["args"] == {"rows": 7, "impl": "sort"}
+    assert ev["dur_ns"] >= 2_000_000  # slept 2 ms
+
+
+def test_tracer_thread_safety():
+    tr = Tracer()
+
+    def work(i):
+        for _ in range(200):
+            with tr.span("outer", worker=i):
+                with tr.span("inner"):
+                    pass
+
+    with ThreadPoolExecutor(max_workers=8) as ex:
+        list(ex.map(work, range(8)))
+    events = tr.finished()
+    assert len(events) == 8 * 200 * 2
+    # Nesting is per-thread: every inner has parent outer, never cross-thread.
+    assert all(e["parent"] == "outer" for e in events if e["name"] == "inner")
+    # JSONL export carries every event, one object per line.
+    lines = [ln for ln in tr.jsonl_events().splitlines() if ln]
+    assert len(lines) == 8 * 200 * 2
+    assert json.loads(lines[0])["name"] in ("outer", "inner")
+
+
+def test_chrome_trace_shape_perfetto_loadable():
+    tr = Tracer()
+    with tr.span("a", k=1):
+        with tr.span("b"):
+            pass
+    doc = tr.chrome_trace()
+    assert set(doc) >= {"traceEvents", "displayTimeUnit"}
+    xs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    ms = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert len(xs) == 2 and ms, "want complete events + metadata rows"
+    for e in xs:
+        assert isinstance(e["ts"], float) and isinstance(e["dur"], float)
+        assert e["dur"] >= 0 and {"name", "pid", "tid", "cat"} <= e.keys()
+    a = next(e for e in xs if e["name"] == "a")
+    b = next(e for e in xs if e["name"] == "b")
+    # b nests inside a on the same track (microsecond units).
+    assert a["ts"] <= b["ts"] and b["ts"] + b["dur"] <= a["ts"] + a["dur"] + 1
+    json.dumps(doc)  # must be serializable as-is
+
+
+def test_tracer_drop_cap():
+    tr = Tracer(max_events=10)
+    for i in range(25):
+        with tr.span("s"):
+            pass
+    assert len(tr.finished()) == 10
+    assert tr.dropped == 15
+    assert tr.chrome_trace()["otherData"]["dropped_events"] == 15
+
+
+def test_tracer_reset():
+    tr = Tracer()
+    with tr.span("x"):
+        pass
+    tr.reset()
+    assert tr.finished() == [] and tr.jsonl_events() == ""
+    with tr.span("y"):  # usable after reset
+        pass
+    assert len(tr.finished()) == 1
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_counter_gauge_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("reqs", "requests")
+    c.inc()
+    c.inc(4)
+    g = reg.gauge("inflight", "in flight")
+    g.set(3)
+    g.inc()
+    g.dec(2)
+    snap = reg.snapshot()
+    assert snap["counters"]["reqs"] == 5
+    assert snap["gauges"]["inflight"] == 2
+    with pytest.raises(TypeError):
+        reg.gauge("reqs", "wrong type for existing name")
+
+
+def test_bucket_builders():
+    lin = linear_buckets(0.0, 1.0, 5)
+    assert lin == (0.0, 1.0, 2.0, 3.0, 4.0)
+    exp = exponential_buckets(1.0, 2.0, 4)
+    assert exp == (1.0, 2.0, 4.0, 8.0)
+    assert all(a < b for a, b in zip(exp, exp[1:]))
+    with pytest.raises(ValueError):
+        exponential_buckets(0.0, 2.0, 4)
+    with pytest.raises(ValueError):
+        linear_buckets(0.0, -1.0, 4)
+
+
+def test_histogram_quantiles_vs_numpy():
+    rng = np.random.default_rng(42)
+    samples = rng.lognormal(mean=-7.0, sigma=1.2, size=5000)  # latency-ish
+    buckets = exponential_buckets(1e-6, 1.3, 60)
+    h = Histogram("lat", buckets, help="latency")
+    for s in samples:
+        h.observe(float(s))
+    for q in (0.50, 0.90, 0.99):
+        est = h.quantile(q)
+        ref = float(np.percentile(samples, q * 100))
+        # Interpolated estimate is off by at most one bucket width at ref.
+        idx = int(np.searchsorted(buckets, ref))
+        width = (buckets[min(idx + 1, len(buckets) - 1)]
+                 - buckets[max(idx - 1, 0)])
+        assert abs(est - ref) <= width, (q, est, ref, width)
+
+
+def test_histogram_snapshot_fields():
+    h = Histogram("h", [1.0, 2.0, 4.0])
+    for v in (0.5, 1.5, 3.0, 100.0):
+        h.observe(v)
+    s = h.snapshot()
+    assert s["count"] == 4 and s["sum"] == pytest.approx(105.0)
+    assert s["min"] == 0.5 and s["max"] == 100.0
+    assert s["buckets"][-1][0] == "+Inf" and s["buckets"][-1][1] == 1
+    assert h.quantile(0.0) <= h.quantile(0.5) <= h.quantile(1.0)
+
+
+def test_prometheus_exposition_golden():
+    reg = MetricsRegistry()
+    reg.counter("engine.blocks", "blocks compressed").inc(3)
+    reg.gauge("engine.inflight_batches", "in flight").set(1)
+    h = reg.histogram("engine.wait_seconds", help="wait", buckets=[0.1, 1.0])
+    h.observe(0.05)
+    h.observe(0.5)
+    h.observe(5.0)
+    text = reg.to_prometheus()
+    expected = "\n".join([
+        "# HELP engine_blocks blocks compressed",
+        "# TYPE engine_blocks counter",
+        "engine_blocks 3",
+        "# HELP engine_inflight_batches in flight",
+        "# TYPE engine_inflight_batches gauge",
+        "engine_inflight_batches 1",
+        "# HELP engine_wait_seconds wait",
+        "# TYPE engine_wait_seconds histogram",
+        'engine_wait_seconds_bucket{le="0.1"} 1',
+        'engine_wait_seconds_bucket{le="1.0"} 2',
+        'engine_wait_seconds_bucket{le="+Inf"} 3',
+        f"engine_wait_seconds_sum {0.05 + 0.5 + 5.0}",
+        "engine_wait_seconds_count 3",
+        "",
+    ])
+    assert text == expected
+
+
+def test_registry_reset():
+    reg = MetricsRegistry()
+    reg.counter("c", "").inc(9)
+    reg.reset()
+    assert reg.snapshot() == {"counters": {}, "gauges": {}, "histograms": {}}
+
+
+# ---------------------------------------------------------------------------
+# gating / facade
+# ---------------------------------------------------------------------------
+
+def test_disabled_records_nothing():
+    obs.configure(enabled=False)
+    obs.reset()
+    with obs.span("ghost", x=1):
+        obs.counter("ghost.count", "").inc()
+        obs.histogram("ghost.h").observe(1.0)
+    assert obs.tracer().finished() == []
+    snap = obs.snapshot()
+    assert snap["enabled"] is False
+    assert snap["metrics"] == {"counters": {}, "gauges": {}, "histograms": {}}
+
+
+def test_enabled_facade_and_dump(enabled_obs, tmp_path):
+    with obs.span("stage.a", rows=2):
+        obs.counter("n", "things").inc(2)
+    paths = obs.dump_artifacts(str(tmp_path / "bundle"))
+    assert set(paths) == {"trace", "events", "metrics", "prometheus"}
+    with open(paths["trace"]) as f:
+        doc = json.load(f)
+    assert any(e.get("name") == "stage.a" for e in doc["traceEvents"])
+    with open(paths["metrics"]) as f:
+        m = json.load(f)
+    assert m["schema_version"] == obs.ARTIFACT_SCHEMA_VERSION
+    assert m["metrics"]["counters"]["n"] == 2
+    with open(paths["events"]) as f:
+        lines = [json.loads(ln) for ln in f if ln.strip()]
+    assert lines and lines[0]["name"] == "stage.a"
+
+
+def test_span_factory_gating(enabled_obs):
+    live = obs.span_factory(True)
+    noop = obs.span_factory(False)
+    with live("real"):
+        pass
+    with noop("fake"):
+        pass
+    names = {e["name"] for e in obs.tracer().finished()}
+    assert names == {"real"}
+
+
+# ---------------------------------------------------------------------------
+# engine integration: spans, stats lifecycle, identical output, overhead
+# ---------------------------------------------------------------------------
+
+def _data(n_blocks=2):
+    from repro.core import corpus_blocks
+    from repro.core.lz4_types import MAX_BLOCK
+
+    full = [b for b in corpus_blocks() if len(b) == MAX_BLOCK]
+    return b"".join((full * n_blocks)[:n_blocks])
+
+
+def test_engine_spans_and_counters(enabled_obs):
+    from repro.core import LZ4DecodeEngine, LZ4Engine
+
+    data = _data()
+    eng = LZ4Engine(micro_batch=8, telemetry=True)
+    frame = eng.compress(data)
+    dec = LZ4DecodeEngine(telemetry=True)
+    assert dec.decode(frame) == data
+
+    names = {e["name"] for e in obs.tracer().finished()}
+    assert {"compress.total", "compress.dispatch", "compress.wait",
+            "compress.drain", "compress.frame"} <= names
+    assert {"decode.total", "decode.execute"} <= names
+    snap = obs.snapshot()["metrics"]
+    assert snap["counters"]["engine.calls"] == 1
+    assert snap["counters"]["engine.bytes_in"] == len(data)
+    assert snap["counters"]["decode.bytes_out"] == len(data)
+    assert snap["histograms"]["engine.block_ratio"]["count"] >= 1
+
+
+def test_stats_per_call_vs_totals():
+    from repro.core import LZ4DecodeEngine, LZ4Engine
+
+    data = _data()
+    eng = LZ4Engine(micro_batch=8)
+    f1 = eng.compress(data)
+    per_call = eng.stats.bytes_in
+    eng.compress(data)
+    assert eng.stats.bytes_in == per_call, "stats must be per-call"
+    assert eng.totals.bytes_in == 2 * per_call, "totals must accumulate"
+    assert eng.totals.calls == 2
+
+    dec = LZ4DecodeEngine()
+    dec.decode(f1)
+    dec.decode(f1)
+    assert dec.stats.calls == 1 and dec.totals.calls == 2
+    assert dec.totals.bytes_out == 2 * len(data)
+
+    d = eng.totals.as_dict()
+    assert d["calls"] == 2 and d["bytes_in"] == 2 * per_call
+    dd = dec.totals.as_dict()
+    assert dd["calls"] == 2 and isinstance(dd, dict)
+
+
+def test_frames_identical_telemetry_on_off(enabled_obs):
+    from repro.core import LZ4Engine
+
+    data = _data()
+    frame_on = LZ4Engine(micro_batch=8, telemetry=True).compress(data)
+    frame_off = LZ4Engine(micro_batch=8, telemetry=False).compress(data)
+    assert frame_on == frame_off, "telemetry must not change frame bytes"
+
+
+def test_noop_overhead_under_budget():
+    """Disabled telemetry must cost <2% on the compress microloop."""
+    from repro.core import LZ4Engine
+
+    obs.configure(enabled=False)
+    data = _data(1)
+    eng = LZ4Engine(micro_batch=8, telemetry=False)
+    eng.compress(data)  # warmup/jit
+
+    def loop(n=6):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            eng.compress(data)
+        return time.perf_counter() - t0
+
+    loop(2)  # settle caches
+    per_call = min(loop() for _ in range(3)) / 6
+    # The disabled hot path is: one flag test per call site plus a shared
+    # no-op context manager.  Measure that microcost directly and scale it
+    # by the number of span entries a compress call actually makes — it
+    # must land under 2% of the measured per-call time.
+    sp = obs.span_factory(False)
+    t0 = time.perf_counter()
+    for _ in range(100_000):
+        with sp("x", rows=1):
+            pass
+    per_span = (time.perf_counter() - t0) / 100_000
+    spans_per_call = 4 + 3 * 8  # total/frame/pad + dispatch/wait/drain per mb
+    assert per_span * spans_per_call < 0.02 * per_call, (
+        per_span, spans_per_call, per_call)
+
+
+# ---------------------------------------------------------------------------
+# trace_report round-trip
+# ---------------------------------------------------------------------------
+
+def test_trace_report_roundtrip(enabled_obs, tmp_path, capsys):
+    from repro.core import LZ4DecodeEngine, LZ4Engine
+
+    data = _data()
+    frame = LZ4Engine(micro_batch=8, telemetry=True).compress(data)
+    LZ4DecodeEngine(telemetry=True).decode(frame)
+    bundle = str(tmp_path / "bundle")
+    obs.dump_artifacts(bundle)
+
+    assert trace_report.main([bundle, "--check"]) == 0
+    out = capsys.readouterr().out
+    assert "schema-valid" in out
+
+    assert trace_report.main([bundle]) == 0
+    table = capsys.readouterr().out
+    for stage in ("compress.dispatch", "compress.wait", "compress.drain",
+                  "decode.execute", "compress.total"):
+        assert stage in table
+    assert "engine.calls" in table  # counters section
+
+    assert trace_report.main([bundle, "--json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["breakdown"]["stages"]["compress.total"]["count"] == 1
+    assert doc["breakdown"]["wall_ms"] > 0
+
+
+def test_trace_report_check_rejects_malformed(tmp_path, capsys):
+    bad = tmp_path / "bad"
+    bad.mkdir()
+    (bad / "trace.json").write_text(json.dumps({"traceEvents": [
+        {"name": "x", "ph": "X", "pid": 1}  # missing tid/ts/dur
+    ]}))
+    (bad / "metrics.json").write_text(json.dumps({"metrics": {}}))
+    assert trace_report.main([str(bad), "--check"]) == 1
+    err = capsys.readouterr().err
+    assert "schema problem" in err
+
+
+def test_trace_report_empty_trace_fails_check(tmp_path):
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    (empty / "trace.json").write_text(json.dumps({"traceEvents": []}))
+    (empty / "metrics.json").write_text(json.dumps(
+        {"schema_version": 1,
+         "metrics": {"counters": {}, "gauges": {}, "histograms": {}}}))
+    assert trace_report.main([str(empty), "--check"]) == 1

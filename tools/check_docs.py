@@ -125,7 +125,8 @@ def main() -> int:
     if not pages:
         print("FAIL: docs/ contains no markdown pages", file=sys.stderr)
         return 1
-    required = {"architecture.md", "frame-format.md", "tuning.md"}
+    required = {"architecture.md", "frame-format.md", "tuning.md",
+                "observability.md"}
     missing = required - {p.name for p in pages}
     errors: list[str] = [f"docs/: required page {m} missing" for m in sorted(missing)]
     for md in pages:
