@@ -1,0 +1,183 @@
+"""Sharded compression fabric: weak scaling across fake device counts.
+
+The fabric (src/repro/distributed/fabric.py) claims the block stack can be
+partitioned over a mesh with per-shard output bytes IDENTICAL to a
+single-device engine on the same slice.  This benchmark validates both
+halves of that claim on CPU:
+
+  * **weak scaling** — each device count N in {1, 2, 4, 8} compresses a
+    corpus of N x BLOCKS_PER_SHARD blocks through a mesh of N fake devices
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=N``, so each sweep
+    point runs in a fresh subprocess: the flag must be set before jax
+    imports).  Under weak scaling the per-shard work is constant, so ideal
+    behaviour is flat wall time / linearly growing throughput.  On CPU the
+    "devices" all share the host's cores, so the curve mostly measures
+    dispatch overhead — the numbers are a correctness-shaped baseline for
+    real multi-chip runs, same caveat as device_emit (EXPERIMENTS.md).
+  * **byte identity** — every sweep point asserts the mesh-path frame equals
+    the host-partition oracle's frame, each shard's subframe equals a
+    single-device engine run on that shard's slice, the v4 container
+    round-trips through the serial oracle, and `read_range` spans crossing
+    shard boundaries return the right bytes.
+
+Writes experiments/benchmarks/sharded_fabric.json, mirrored to
+BENCH_sharded_fabric.json at the repo root.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+if __package__ in (None, ""):        # `python benchmarks/sharded_fabric.py`
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from common import dump_telemetry, save_json
+else:
+    from .common import dump_telemetry, save_json
+
+DEVICE_COUNTS = (1, 2, 4, 8)
+BLOCKS_PER_SHARD = 2
+REPEAT = 2
+
+# Runs in a fresh interpreter per device count; prints one RESULT: JSON line.
+_CHILD = r"""
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core import FrameReader, LZ4Engine, decode_frame_serial, frame_info
+from repro.core.lz4_types import MAX_BLOCK
+from repro.distributed import fabric
+from repro.distributed.sharding import make_mesh_compat
+
+import jax
+
+devices = int(os.environ["FABRIC_BENCH_DEVICES"])
+blocks_per_shard = int(os.environ["FABRIC_BENCH_BPS"])
+repeat = int(os.environ["FABRIC_BENCH_REPEAT"])
+assert len(jax.devices()) == devices
+
+n_blocks = devices * blocks_per_shard
+rng = np.random.default_rng(7)
+parts = []
+for i in range(n_blocks):
+    # 2/3 compressible structure, 1/3 incompressible per block
+    parts.append((b"weak scaling shard %d " % i) * (2 * MAX_BLOCK // 63))
+    parts.append(rng.integers(0, 256, MAX_BLOCK // 3, np.uint8).tobytes())
+data = b"".join(parts)[: n_blocks * MAX_BLOCK]
+
+mesh = make_mesh_compat((devices,), ("data",))
+eng = LZ4Engine(mesh=mesh)
+assert eng.shards == devices
+
+frame = eng.compress(data)  # warmup (jit compile)
+best = float("inf")
+for _ in range(repeat):
+    t0 = time.perf_counter()
+    frame = eng.compress(data)
+    best = min(best, time.perf_counter() - t0)
+
+# -- byte-identity checks (the acceptance criteria, not just timing) --------
+info = frame_info(frame)
+assert info["version"] == 4 and info["shard_count"] == devices
+oracle = LZ4Engine(shards=devices).compress(data)
+identical_to_oracle = frame == oracle
+single = LZ4Engine()
+chunks = [data[i: i + MAX_BLOCK] for i in range(0, len(data), MAX_BLOCK)]
+per_shard_identical = all(
+    fabric.shard_subframe(frame, sl.shard) == single.compress(
+        b"".join(chunks[sl.start: sl.stop]))
+    for sl in fabric.partition_blocks(len(chunks), devices))
+roundtrip_ok = decode_frame_serial(frame) == data
+r = FrameReader(frame)
+b = blocks_per_shard * MAX_BLOCK  # first shard boundary
+cross_read_ok = (devices == 1 or
+                 r.read_range(b - 64, 128) == data[b - 64: b + 64])
+
+print("RESULT:" + json.dumps({
+    "devices": devices,
+    "blocks": n_blocks,
+    "bytes_in": len(data),
+    "frame_bytes": len(frame),
+    "compress_s": round(best, 4),
+    "compress_mb_s": round(len(data) / best / 1e6, 3),
+    "dispatches": eng.stats.dispatches,
+    "identical_to_host_oracle": identical_to_oracle,
+    "per_shard_identical_to_single_device": per_shard_identical,
+    "serial_roundtrip_ok": roundtrip_ok,
+    "cross_shard_read_range_ok": cross_read_ok,
+}))
+"""
+
+
+def _run_point(devices: int) -> dict:
+    env = dict(os.environ)
+    env.update({
+        "XLA_FLAGS": f"--xla_force_host_platform_device_count={devices}",
+        "JAX_PLATFORMS": "cpu",
+        "PYTHONPATH": os.pathsep.join(
+            [os.path.join(os.path.dirname(__file__), "..", "src"),
+             env.get("PYTHONPATH", "")]).rstrip(os.pathsep),
+        "FABRIC_BENCH_DEVICES": str(devices),
+        "FABRIC_BENCH_BPS": str(BLOCKS_PER_SHARD),
+        "FABRIC_BENCH_REPEAT": str(REPEAT),
+    })
+    proc = subprocess.run([sys.executable, "-c", _CHILD], env=env,
+                          capture_output=True, text=True, timeout=900)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"fabric bench child (devices={devices}) failed:\n"
+            + proc.stderr[-3000:])
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")][0]
+    return json.loads(line[len("RESULT:"):])
+
+
+def run() -> dict:
+    points = []
+    for devices in DEVICE_COUNTS:
+        pt = _run_point(devices)
+        for check in ("identical_to_host_oracle",
+                      "per_shard_identical_to_single_device",
+                      "serial_roundtrip_ok", "cross_shard_read_range_ok"):
+            assert pt[check], f"devices={devices}: {check} failed"
+        points.append(pt)
+        print(f"[sharded_fabric] devices={devices} "
+              f"blocks={pt['blocks']} {pt['compress_mb_s']} MB/s "
+              f"({pt['dispatches']} dispatches)", flush=True)
+
+    base = points[0]
+    out = {
+        "config": {
+            "device_counts": list(DEVICE_COUNTS),
+            "blocks_per_shard": BLOCKS_PER_SHARD,
+            "repeat": REPEAT,
+            "note": "fake CPU devices share the host's cores: the scaling "
+                    "column measures dispatch overhead, the identity "
+                    "columns are the real acceptance surface",
+        },
+        "weak_scaling": points,
+        "summary": {
+            "throughput_x_1_to_8": round(
+                points[-1]["compress_mb_s"] / base["compress_mb_s"], 2),
+            "all_frames_byte_identical_to_oracle": True,
+            "all_per_shard_identical_to_single_device": True,
+        },
+    }
+    save_json("sharded_fabric", out)
+    root = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_sharded_fabric.json")
+    with open(root, "w") as f:
+        json.dump(out, f, indent=1)
+    # With REPRO_OBS=1 the parent process has no spans of its own (the work
+    # runs in the sweep children) but the bundle still records the registry
+    # state for trace_report's schema check.
+    dump_telemetry("sharded_fabric")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -57,12 +57,17 @@ def _flatten(tree, path=""):
         yield path, tree
 
 
-def _compress_leaf(raw: bytes, use_jax: bool) -> tuple[list[tuple[bool, bytes]], int]:
+def _compress_leaf(raw: bytes, use_jax: bool,
+                   engine=None) -> tuple[list[tuple[bool, bytes]], int]:
     chunks = [raw[i : i + MAX_BLOCK] for i in range(0, max(len(raw), 1), MAX_BLOCK)]
     # One engine call per leaf: all of the leaf's blocks go through
     # micro-batched dispatches instead of one jit call per 64 KB chunk.
+    # A sharded engine (LZ4Engine(mesh=...) / shards=N) partitions the
+    # leaf's block stack across the fabric; the output block list is
+    # identical either way (global order, no framing).
     lz_blocks = (
-        default_engine().compress_to_blocks(raw) if use_jax and len(raw) >= 1024 else None
+        (engine or default_engine()).compress_to_blocks(raw)
+        if use_jax and len(raw) >= 1024 else None
     )
     blocks = []
     comp_total = 0
@@ -78,8 +83,14 @@ def _compress_leaf(raw: bytes, use_jax: bool) -> tuple[list[tuple[bool, bytes]],
 
 
 def save(ckpt_dir: str, step: int, tree, *, compress: bool = True,
-         async_write: bool = False, keep_last: int = 3):
-    """Write a checkpoint. Returns the final path (or a Thread if async)."""
+         async_write: bool = False, keep_last: int = 3, engine=None):
+    """Write a checkpoint. Returns the final path (or a Thread if async).
+
+    `engine`: optional `LZ4Engine` override — e.g. a sharded engine
+    (``LZ4Engine(mesh=...)``) so each leaf's block stack compresses across
+    the mesh fabric instead of one device.  Block bytes are identical
+    either way, so checkpoints stay interchangeable.
+    """
     # Snapshot synchronously (cheap device_get), write possibly in background.
     with obs.span("checkpoint.snapshot", step=step):
         leaves = [(p, np.asarray(jax.device_get(x))) for p, x in _flatten(tree)]
@@ -96,7 +107,7 @@ def save(ckpt_dir: str, step: int, tree, *, compress: bool = True,
                 for path, arr in leaves:
                     raw = arr.tobytes()
                     raw_total += len(raw)
-                    blocks, _ = _compress_leaf(raw, compress)
+                    blocks, _ = _compress_leaf(raw, compress, engine)
                     entry = {
                         "path": path,
                         "shape": list(arr.shape),

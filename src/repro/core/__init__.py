@@ -47,6 +47,10 @@ from .encoder import encode_block  # noqa: F401
 from .decoder import decode_block, decode_block_bytewise, LZ4FormatError  # noqa: F401
 from .emitter import emit_block, emit_block_from_records  # noqa: F401
 from .frame import (  # noqa: F401
+    VERSION_V1,
+    VERSION_V2,
+    VERSION_V3,
+    VERSION_V4,
     FrameFormatError,
     block_crc,
     decode_frame,

@@ -210,18 +210,25 @@ class DecodeStats:
     device_blocks: int = 0     # blocks decoded inside the jit graph
     fallback_blocks: int = 0   # device executor blocks decoded on host
     host_bytes: int = 0        # bytes fetched device -> host
+    shards: int = 0            # sharded-fabric calls: mesh shard count
     calls: int = 0             # 1 per finished call (totals.calls sums them)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
 
     def accumulate(self, other: "DecodeStats") -> None:
-        """Fold ``other`` (one finished call) into this accumulator."""
+        """Fold ``other`` (one finished call) into this accumulator.
+
+        NOT thread-safe by itself — the engine serializes its `totals`
+        accumulation behind a lock (`_finish_call`); external accumulators
+        shared across threads need their own.
+        """
         for f in ("blocks", "raw_blocks", "bytes_in", "bytes_out",
                   "dispatches", "device_blocks", "fallback_blocks",
                   "host_bytes"):
             setattr(self, f, getattr(self, f) + getattr(other, f))
         self.parallel = self.parallel or other.parallel
+        self.shards = max(self.shards, other.shards)
         self.calls += max(other.calls, 1)
 
 
@@ -243,13 +250,34 @@ class LZ4DecodeEngine:
                  micro_batch: int = 8, use_pallas: bool = False,
                  caps: DevicePlanCaps | None = None,
                  adaptive_rounds: bool = True,
-                 telemetry: bool | None = None):
+                 telemetry: bool | None = None,
+                 mesh=None,
+                 shard_axes: tuple[str, ...] | None = None):
         if executor is not None and executor not in _EXECUTORS:
             raise ValueError(f"executor must be one of {_EXECUTORS}")
         if workers is not None and workers < 1:
             raise ValueError("workers must be >= 1")
         if micro_batch < 1:
             raise ValueError("micro_batch must be >= 1")
+        # Sharded-fabric configuration — the read-side mirror of
+        # `LZ4Engine(mesh=...)`: with a mesh spanning >1 shard, frame-block
+        # decode routes through `distributed.fabric.decode_items_sharded`
+        # (host planning, then shard_map(vmap(decode_gather)) dispatches).
+        if mesh is not None:
+            axes = tuple(shard_axes) if shard_axes is not None \
+                else tuple(mesh.axis_names)
+            for a in axes:
+                if a not in mesh.axis_names:
+                    raise ValueError(f"shard axis {a!r} not in mesh "
+                                     f"{tuple(mesh.axis_names)}")
+            from repro.distributed.fabric import mesh_shard_count
+
+            self.mesh, self.shard_axes = mesh, axes
+            self.shards = mesh_shard_count(mesh, axes)
+        else:
+            if shard_axes is not None:
+                raise ValueError("shard_axes requires mesh")
+            self.mesh, self.shard_axes, self.shards = None, (), 1
         if executor is None:
             executor = "serial" if (workers or 1) == 1 else "thread"
         if workers is None:
@@ -279,17 +307,23 @@ class LZ4DecodeEngine:
         self.telemetry = telemetry
         self.stats = DecodeStats()      # most recent call (see DecodeStats)
         self.totals = DecodeStats()     # lifetime accumulator
+        # `totals` is shared mutable state: concurrent calls (FrameReader
+        # users across threads, serving restore fan-out) each fold their
+        # own per-call stats object in under this lock, so lifetime
+        # counters never lose updates.  `stats` stays last-call-wins.
+        self._totals_lock = threading.Lock()
         self._pool = None
         self._pool_lock = threading.Lock()
 
     def _obs_on(self) -> bool:
         return obs.enabled_for(self.telemetry)
 
-    def _finish_call(self) -> None:
+    def _finish_call(self, st: DecodeStats) -> None:
         """Fold the finished call's stats into `totals` + the obs registry."""
-        s = self.stats
+        s = st
         s.calls = 1
-        self.totals.accumulate(s)
+        with self._totals_lock:
+            self.totals.accumulate(s)
         if self._obs_on():
             r = obs.registry()
             r.counter("decode.calls", "decode calls").inc()
@@ -339,12 +373,12 @@ class LZ4DecodeEngine:
     def __exit__(self, *exc):
         self.close()
 
-    def _map(self, fn, items: list) -> list:
+    def _map(self, fn, items: list, st: DecodeStats) -> list:
         """Run fn over items on the configured executor (inline when the
         batch is too small for fan-out to pay)."""
         if (self.executor in ("thread", "process") and self.workers > 1
                 and len(items) >= self.min_parallel_blocks):
-            self.stats.parallel = True
+            st.parallel = True
             # ~4 chunks per worker: amortizes the process pool's per-task
             # IPC (3x measured) while keeping the tail balanced.
             chunk = max(1, len(items) // (self.workers * 4))
@@ -373,21 +407,34 @@ class LZ4DecodeEngine:
             raise ValueError("payloads/raws length mismatch")
         if usizes is not None and len(usizes) != len(payloads):
             raise ValueError("usizes length mismatch")
-        self.stats = DecodeStats(
+        st = DecodeStats(
             blocks=len(payloads), raw_blocks=sum(map(bool, raws)),
             bytes_in=sum(len(p) for p in payloads),
         )
+        self.stats = st
         try:
             with obs.span_factory(self._obs_on())(
                     "decode.total", blocks=len(payloads),
                     executor=self.executor):
-                return self._decode_blocks_inner(payloads, raws, usizes)
+                return self._decode_blocks_inner(payloads, raws, usizes, st)
         finally:
-            self._finish_call()
+            self._finish_call(st)
 
-    def _decode_blocks_inner(self, payloads, raws, usizes) -> list[bytes]:
+    def _decode_blocks_inner(self, payloads, raws, usizes,
+                             st: DecodeStats) -> list[bytes]:
         ob = self._obs_on()
         out: list[bytes | None] = [None] * len(payloads)
+        if self.mesh is not None and self.shards > 1:
+            from repro.distributed import fabric
+
+            st.shards = self.shards
+            items = [(i, bytes(p),
+                      usizes[i] if usizes is not None else None, None,
+                      bool(raw))
+                     for i, (p, raw) in enumerate(zip(payloads, raws))]
+            out = fabric.decode_items_sharded(self, items, st)
+            st.bytes_out = sum(len(d) for d in out)
+            return out
         if self.executor == "device":
             jobs = []
             for i, (payload, raw) in enumerate(zip(payloads, raws)):
@@ -404,15 +451,15 @@ class LZ4DecodeEngine:
                         f"expected {usize}"
                     )
                 if dplan is None:
-                    self.stats.fallback_blocks += 1
+                    st.fallback_blocks += 1
                     out[i] = execute_plan(payload, plan).tobytes()
                 else:
                     jobs.append((i, payload, dplan))
 
             def finish(slot, payload, dp, row):
-                out[slot] = self._fetch_row(row, dp.out_size)
+                out[slot] = self._fetch_row(row, dp.out_size, st)
 
-            self._execute_device(jobs, finish)
+            self._execute_device(jobs, finish, st)
         else:
             jobs = []
             for i, (payload, raw) in enumerate(zip(payloads, raws)):
@@ -423,9 +470,9 @@ class LZ4DecodeEngine:
                                      usizes[i] if usizes is not None else None,
                                      i, self.two_phase, ob)))
             for (i, _), data in zip(jobs, self._map(_plain_block_task,
-                                                    [j for _, j in jobs])):
+                                                    [j for _, j in jobs], st)):
                 out[i] = data
-        self.stats.bytes_out = sum(len(d) for d in out)
+        st.bytes_out = sum(len(d) for d in out)
         return out
 
     # -- device executor ----------------------------------------------------
@@ -446,7 +493,7 @@ class LZ4DecodeEngine:
             except DevicePlanOverflow:
                 return plan, None
 
-    def _dispatch_device(self, batch: list):
+    def _dispatch_device(self, batch: list, st: DecodeStats):
         """ONE vmapped jit dispatch for a micro-batch of (payload, dplan).
 
         Pads the batch count to the next power of two (bounded compile
@@ -471,15 +518,15 @@ class LZ4DecodeEngine:
             rounds = max(rounds, dp.n_waves)
         fn = _device_decode_compiled(caps.out_cap, _round_bucket(rounds),
                                      self.use_pallas)
-        self.stats.dispatches += 1
-        self.stats.device_blocks += len(batch)
+        st.dispatches += 1
+        st.device_blocks += len(batch)
         with sp("decode.execute", rows=len(batch), executor="device",
                 rounds=rounds):
             return fn(jnp.asarray(blk), *(jnp.asarray(a) for a in lit),
                       *(jnp.asarray(a) for a in mat),
                       *(jnp.asarray(a) for a in scal))
 
-    def _execute_device(self, jobs: list, finish) -> None:
+    def _execute_device(self, jobs: list, finish, st: DecodeStats) -> None:
         """Micro-batched, double-buffered device execution.
 
         ``jobs``: list of (slot, payload, dplan); ``finish(slot, payload,
@@ -491,7 +538,7 @@ class LZ4DecodeEngine:
         inflight = None
         for start in range(0, len(jobs), self.micro_batch):
             chunk = jobs[start: start + self.micro_batch]
-            res = self._dispatch_device([(p, dp) for _, p, dp in chunk])
+            res = self._dispatch_device([(p, dp) for _, p, dp in chunk], st)
             if inflight is not None:
                 prev, out = inflight
                 for row, (slot, payload, dp) in enumerate(prev):
@@ -502,23 +549,37 @@ class LZ4DecodeEngine:
             for row, (slot, payload, dp) in enumerate(prev):
                 finish(slot, payload, dp, out[row])
 
-    def _fetch_row(self, row, usize: int) -> bytes:
+    def _fetch_row(self, row, usize: int, st: DecodeStats) -> bytes:
         """Slice-fetch exactly `usize` decoded bytes of one output row
         (the transfer the host_bytes counter measures).  The span doubles
         as the device-wait measurement: the fetch synchronizes on the
         dispatched decode graph."""
         with obs.span_factory(self._obs_on())("decode.drain", bytes=usize):
             data = np.asarray(row[:usize]).tobytes()
-        self.stats.host_bytes += usize
+        st.host_bytes += usize
         return data
 
     # -- frames -------------------------------------------------------------
 
-    def _decode_entries(self, frame: bytes, entries: list[tuple[int, dict]]
-                        ) -> list[bytes]:
-        """Decode the given (index, table-entry) frame blocks, in order."""
+    def _decode_entries(self, frame: bytes, entries: list[tuple[int, dict]],
+                        st: DecodeStats | None = None) -> list[bytes]:
+        """Decode the given (index, table-entry) frame blocks, in order.
+
+        ``st`` is the owning call's stats object; `FrameReader` reads come
+        through without one and count into whatever call came last
+        (documented in `DecodeStats`).
+        """
+        if st is None:
+            st = self.stats
+        if self.mesh is not None and self.shards > 1:
+            from repro.distributed import fabric
+
+            st.shards = self.shards
+            items = [(i, frame[b["offset"]: b["offset"] + b["csize"]],
+                      b["usize"], b["crc"], b["raw"]) for i, b in entries]
+            return fabric.decode_items_sharded(self, items, st)
         if self.executor == "device":
-            return self._decode_entries_device(frame, entries)
+            return self._decode_entries_device(frame, entries, st=st)
         ob = self._obs_on()
         sp = obs.span_factory(ob)
         out: list[bytes | None] = [None] * len(entries)
@@ -533,13 +594,14 @@ class LZ4DecodeEngine:
                 jobs.append((j, (payload, b["usize"], b["crc"], i,
                                  self.two_phase, ob)))
         for (j, _), data in zip(jobs, self._map(_frame_block_task,
-                                                [a for _, a in jobs])):
+                                                [a for _, a in jobs], st)):
             out[j] = data
         return out
 
     def _decode_entries_device(self, frame: bytes,
                                entries: list[tuple[int, dict]],
-                               to_device: bool = False, verify: bool = True):
+                               to_device: bool = False, verify: bool = True,
+                               st: DecodeStats | None = None):
         """Device-executor decode of (index, table-entry) frame blocks.
 
         ``to_device=True`` returns per-block DEVICE arrays (uint8) instead
@@ -551,6 +613,8 @@ class LZ4DecodeEngine:
         `DecodeStats.host_bytes` stays the download-only *content* counter,
         mirroring `EngineStats`, so verified device restores keep it at 0).
         """
+        if st is None:
+            st = self.stats
         if to_device and verify:
             from repro.kernels.ops import crc32_bytes  # already jitted
 
@@ -582,7 +646,7 @@ class LZ4DecodeEngine:
                     f"table says {b['usize']}"
                 )
             if dplan is None:
-                self.stats.fallback_blocks += 1
+                st.fallback_blocks += 1
                 with sp("decode.execute", block=i, fallback=True):
                     data = execute_plan(payload, plan).tobytes()
                 with sp("decode.verify", block=i):
@@ -607,12 +671,12 @@ class LZ4DecodeEngine:
                                         b["crc"]))
                 out[slot] = dev
                 return
-            data = self._fetch_row(row, dp.out_size)
+            data = self._fetch_row(row, dp.out_size, st)
             with sp("decode.verify", block=i):
                 check_block(i, b["usize"], b["crc"], data)
             out[slot] = data
 
-        self._execute_device(jobs, finish)
+        self._execute_device(jobs, finish, st)
         with sp("decode.verify", blocks=len(pending_crc), in_graph=True):
             for i, got, want in pending_crc:
                 if int(got) != want:
@@ -635,21 +699,23 @@ class LZ4DecodeEngine:
         """
         info = frame_info(frame)
         blocks = info["blocks"]
-        self.stats = DecodeStats(
+        st = DecodeStats(
             blocks=len(blocks),
             raw_blocks=sum(b["raw"] for b in blocks),
             bytes_in=len(frame),
         )
+        self.stats = st
         try:
             with obs.span_factory(self._obs_on())(
                     "decode.total", blocks=len(blocks),
                     executor=self.executor):
-                parts = self._decode_entries(frame, list(enumerate(blocks)))
+                parts = self._decode_entries(frame, list(enumerate(blocks)),
+                                             st)
                 out = b"".join(parts)
-            self.stats.bytes_out = len(out)
+            st.bytes_out = len(out)
             return out
         finally:
-            self._finish_call()
+            self._finish_call(st)
 
     def decode_to_device(self, frame: bytes, verify: bool = True):
         """Frame -> decoded bytes as ONE device uint8 array (no host copy).
@@ -671,24 +737,25 @@ class LZ4DecodeEngine:
 
         info = frame_info(frame)
         blocks = info["blocks"]
-        self.stats = DecodeStats(
+        st = DecodeStats(
             blocks=len(blocks),
             raw_blocks=sum(b["raw"] for b in blocks),
             bytes_in=len(frame),
         )
+        self.stats = st
         try:
             with obs.span_factory(self._obs_on())(
                     "decode.total", blocks=len(blocks), executor="device",
                     to_device=True, verify=verify):
                 parts = self._decode_entries_device(
                     frame, list(enumerate(blocks)), to_device=True,
-                    verify=verify)
-            self.stats.bytes_out = sum(b["usize"] for b in blocks)
+                    verify=verify, st=st)
+            st.bytes_out = sum(b["usize"] for b in blocks)
             if not parts:
                 return jnp.zeros((0,), jnp.uint8)
             return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
         finally:
-            self._finish_call()
+            self._finish_call(st)
 
 
 class FrameReader:

@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -110,17 +111,24 @@ class EngineStats:
     bytes_out: int = 0
     host_bytes: int = 0  # bytes fetched device -> host (records or emit buffers)
     candidate_impl: str = ""  # the RESOLVED impl that ran ("auto" never runs)
+    shards: int = 0  # sharded-fabric calls: shard count of the v4 container
     calls: int = 0  # 1 per finished call (so totals.calls counts calls)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
 
     def accumulate(self, other: "EngineStats") -> None:
-        """Fold ``other`` (one finished call) into this accumulator."""
+        """Fold ``other`` (one finished call) into this accumulator.
+
+        NOT thread-safe by itself — the engine serializes its `totals`
+        accumulation behind a lock (`_finish_call`); external accumulators
+        shared across threads need their own.
+        """
         for f in ("blocks", "dispatches", "raw_blocks", "bytes_in",
                   "bytes_out", "host_bytes"):
             setattr(self, f, getattr(self, f) + getattr(other, f))
         self.calls += max(other.calls, 1)
+        self.shards = max(self.shards, other.shards)
         if other.candidate_impl:
             self.candidate_impl = other.candidate_impl
 
@@ -148,11 +156,44 @@ class LZ4Engine:
                  donate: bool | None = None,
                  device_emit: bool = True,
                  drain: str = "sliced",
-                 telemetry: bool | None = None):
+                 telemetry: bool | None = None,
+                 mesh=None,
+                 shard_axes: tuple[str, ...] | None = None,
+                 shards: int | None = None):
         if micro_batch < 1:
             raise ValueError("micro_batch must be >= 1")
         if drain not in ("sliced", "full"):
             raise ValueError('drain must be "sliced" or "full"')
+        # Sharded-fabric configuration (docs/architecture.md §Sharded
+        # compression fabric).  ``mesh`` routes `compress` through
+        # shard_map over ``shard_axes`` (default: every mesh axis) and the
+        # output becomes a frame-v4 container; ``shards`` without a mesh
+        # selects the host-partition path (the per-shard oracle, and the
+        # only option on a single-device container) writing the same v4
+        # shape.  ``shards=None`` with no mesh keeps the classic v3 writer.
+        if mesh is not None:
+            axes = tuple(shard_axes) if shard_axes is not None \
+                else tuple(mesh.axis_names)
+            for a in axes:
+                if a not in mesh.axis_names:
+                    raise ValueError(f"shard axis {a!r} not in mesh "
+                                     f"{tuple(mesh.axis_names)}")
+            from repro.distributed.fabric import mesh_shard_count
+
+            n = mesh_shard_count(mesh, axes)
+            if shards is not None and shards != n:
+                raise ValueError(f"shards={shards} != mesh shard count {n}")
+            if not device_emit and n > 1:
+                raise ValueError(
+                    "the mesh fabric path requires device_emit=True "
+                    "(host emission cannot run under shard_map)")
+            self.mesh, self.shard_axes, self.shards = mesh, axes, n
+        else:
+            if shard_axes is not None:
+                raise ValueError("shard_axes requires mesh")
+            if shards is not None and shards < 1:
+                raise ValueError("shards must be >= 1")
+            self.mesh, self.shard_axes, self.shards = None, (), shards
         self.hash_bits = hash_bits
         self.max_match = max_match
         self.pws = pws
@@ -186,16 +227,37 @@ class LZ4Engine:
         self.telemetry = telemetry
         self.stats = EngineStats()      # most recent call (see EngineStats)
         self.totals = EngineStats()     # lifetime accumulator
+        # `totals` is shared mutable state: concurrent calls (serving
+        # offload threads all using default_engine()) each fold their own
+        # per-call stats object in under this lock, so lifetime counters
+        # never lose updates.  `stats` stays a last-call-wins pointer.
+        self._totals_lock = threading.Lock()
         self._sp = obs.span_factory(False)  # refreshed per call
+        self._worker: "LZ4Engine | None" = None  # fabric host-path clone
 
     def _obs_on(self) -> bool:
         return obs.enabled_for(self.telemetry)
 
-    def _finish_call(self) -> None:
+    def _shard_worker(self) -> "LZ4Engine":
+        """Single-device clone for the fabric's host-partition path (same
+        datapath config, no mesh — the per-shard oracle)."""
+        if self._worker is None:
+            self._worker = LZ4Engine(
+                hash_bits=self.hash_bits, max_match=self.max_match,
+                pws=self.pws, micro_batch=self.micro_batch,
+                use_pallas=self.use_pallas, scan_impl=self.scan_impl,
+                candidate_impl=self.candidate_impl, donate=self.donate,
+                device_emit=self.device_emit, drain=self.drain,
+                telemetry=self.telemetry,
+            )
+        return self._worker
+
+    def _finish_call(self, st: EngineStats) -> None:
         """Fold the finished call's stats into `totals` + the obs registry."""
-        s = self.stats
+        s = st
         s.calls = 1
-        self.totals.accumulate(s)
+        with self._totals_lock:
+            self.totals.accumulate(s)
         if self._obs_on():
             r = obs.registry()
             r.counter("engine.calls", "compress calls").inc()
@@ -210,14 +272,14 @@ class LZ4Engine:
 
     # -- dispatch -----------------------------------------------------------
 
-    def _dispatch(self, stack: np.ndarray, ns: np.ndarray):
+    def _dispatch(self, stack: np.ndarray, ns: np.ndarray, st: EngineStats):
         """ONE device dispatch for a (M, MAX_BLOCK+_PAD) micro-batch."""
         fn = _batched_compiled(
             self.hash_bits, self.max_match, self.pws, self.use_pallas,
             self.scan_impl, self.candidate_impl, self.donate,
             self.device_emit,
         )
-        self.stats.dispatches += 1
+        st.dispatches += 1
         with self._sp("compress.dispatch", rows=len(ns),
                       impl=self.candidate_impl):
             return fn(jnp.asarray(stack), jnp.asarray(ns))
@@ -233,19 +295,21 @@ class LZ4Engine:
                 ns[j] = len(c)
             return stack, ns
 
-    def _payload_iter(self, data: bytes):
-        """Yield (chunk, n, size, payload_fn) per block.
+    def _payload_iter(self, data: bytes, st: EngineStats):
+        """Yield (chunk, n, size, payload_fn) per block, counting into `st`.
 
         `payload_fn()` materializes the compressed block bytes: a buffer
         slice on the device-emit path, a host `emit_block` call otherwise.
         Double-buffered: micro-batch i+1 is padded and dispatched before the
         host blocks on micro-batch i's results, so host-side padding (and
         frame assembly) overlaps device compute (jax dispatch is
-        asynchronous).
+        asynchronous).  ``st`` is the CALL-LOCAL stats object (incremented,
+        never replaced) — concurrent calls each carry their own, which is
+        what keeps `totals` exact under threaded use.
         """
         chunks = [data[i: i + MAX_BLOCK] for i in range(0, len(data), MAX_BLOCK)]
-        self.stats = EngineStats(blocks=len(chunks), bytes_in=len(data),
-                                 candidate_impl=self.candidate_impl)
+        st.blocks += len(chunks)
+        st.bytes_in += len(data)
         ob = self._obs_on()
         self._sp = obs.span_factory(ob)
         occupancy = obs.registry().gauge(
@@ -256,7 +320,7 @@ class LZ4Engine:
         for start in range(0, len(chunks), self.micro_batch):
             batch = chunks[start: start + self.micro_batch]
             stack, ns = self._pad_batch(batch)
-            res = self._dispatch(stack, ns)
+            res = self._dispatch(stack, ns, st)
             occupancy.inc()
             if inflight is not None:
                 # Double-buffer overlap: batch i drains while i+1 computes.
@@ -265,22 +329,22 @@ class LZ4Engine:
                         "engine.overlapped_dispatches",
                         "dispatches issued while the previous batch was "
                         "still in flight").inc()
-                yield from self._drain(*inflight)
+                yield from self._drain(*inflight, st)
                 occupancy.dec()
             inflight = (batch, res)
         if inflight is not None:
-            yield from self._drain(*inflight)
+            yield from self._drain(*inflight, st)
             occupancy.dec()
 
-    def _fetch_sliced(self, out_dev, j: int, size: int) -> bytes:
+    def _fetch_sliced(self, out_dev, j: int, size: int, st: EngineStats) -> bytes:
         """Slice-fetch exactly `size` compressed bytes of row j (the device
         slice executes on-device; only the payload crosses to host)."""
         with self._sp("compress.drain", bytes=size):
             data = np.asarray(out_dev[j, :size]).tobytes()
-        self.stats.host_bytes += size
+        st.host_bytes += size
         return data
 
-    def _drain(self, batch: list[bytes], res):
+    def _drain(self, batch: list[bytes], res, st: EngineStats):
         if self.device_emit:
             if self.drain == "sliced":
                 # Two-step drain: sync on the tiny size vector, then fetch
@@ -293,15 +357,15 @@ class LZ4Engine:
                 # drain is host-side transfer/assembly).
                 with self._sp("compress.wait", rows=len(batch)):
                     size = jax.device_get(size_dev)
-                self.stats.host_bytes += size.nbytes
+                st.host_bytes += size.nbytes
                 for j, chunk in enumerate(batch):
                     s = int(size[j])
                     yield chunk, len(chunk), s, functools.partial(
-                        self._fetch_sliced, out_dev, j, s)
+                        self._fetch_sliced, out_dev, j, s, st)
                 return
             with self._sp("compress.wait", rows=len(batch)):
                 out, size = jax.device_get(res)
-            self.stats.host_bytes += out.nbytes + size.nbytes
+            st.host_bytes += out.nbytes + size.nbytes
             for j, chunk in enumerate(batch):
                 s = int(size[j])
                 yield chunk, len(chunk), s, functools.partial(_slice_payload, out, j, s)
@@ -310,8 +374,8 @@ class LZ4Engine:
                 emit, pos, length, offset, size = jax.device_get(
                     (res.emit, res.pos, res.length, res.offset, res.size)
                 )
-            self.stats.host_bytes += (emit.nbytes + pos.nbytes + length.nbytes
-                                      + offset.nbytes + size.nbytes)
+            st.host_bytes += (emit.nbytes + pos.nbytes + length.nbytes
+                              + offset.nbytes + size.nbytes)
             for j, chunk in enumerate(batch):
                 yield chunk, len(chunk), int(size[j]), functools.partial(
                     emit_block, chunk, emit[j], pos[j], length[j], offset[j],
@@ -325,10 +389,23 @@ class LZ4Engine:
 
         Blocks whose exact compressed size (computed in-graph) does not beat
         the raw size are stored as raw passthrough, so worst-case expansion
-        is the frame header, not LZ4's literal-run overhead.
+        is the frame header, not LZ4's literal-run overhead.  With a mesh or
+        ``shards=`` configured the call routes through the sharded fabric
+        (distributed/fabric.py) and the output is a frame-v4 container.
         """
+        st = EngineStats(candidate_impl=self.candidate_impl)
+        self.stats = st
         ob = self._obs_on()
         sp = obs.span_factory(ob)
+        if self.shards is not None:
+            from repro.distributed import fabric
+
+            try:
+                with sp("compress.total", bytes_in=len(data),
+                        shards=self.shards):
+                    return fabric.compress_sharded(self, data, st)
+            finally:
+                self._finish_call(st)
         ratio_hist = obs.registry().histogram(
             "engine.block_ratio", obs.DEFAULT_RATIO_BUCKETS,
             "per-block compression ratio usize/csize (raw blocks -> 1.0)",
@@ -336,11 +413,11 @@ class LZ4Engine:
         try:
             with sp("compress.total", bytes_in=len(data)):
                 payloads, usizes, raws, crcs = [], [], [], []
-                for chunk, n, size, payload_fn in self._payload_iter(data):
+                for chunk, n, size, payload_fn in self._payload_iter(data, st):
                     if size >= n:
                         payloads.append(chunk)
                         raws.append(True)
-                        self.stats.raw_blocks += 1
+                        st.raw_blocks += 1
                         if ratio_hist is not None and n:
                             ratio_hist.observe(1.0)
                     else:
@@ -356,32 +433,48 @@ class LZ4Engine:
                 with sp("compress.frame", blocks=len(payloads)):
                     frame = encode_frame(payloads, usizes, raws,
                                          checksums=crcs)
-                self.stats.bytes_out = len(frame)
+                st.bytes_out = len(frame)
                 return frame
         finally:
-            self._finish_call()
+            self._finish_call(st)
 
     def compress_to_blocks(self, data: bytes) -> list[bytes]:
         """bytes -> list of raw LZ4 blocks (one per 64 KB, no framing).
 
         Backwards-compatible output of the old `compress_bytes`: every block
         is valid LZ4 (no passthrough), lengths must travel out-of-band.
+        Sharded engines partition the block stack across shards (same
+        contiguous split as `compress`) but the output is the same flat,
+        globally-ordered block list.
         """
+        st = EngineStats(candidate_impl=self.candidate_impl)
+        self.stats = st
         if not data:
             # Host-emitted empty block: no dispatch, no candidate stage ran.
-            self.stats = EngineStats(blocks=1,
-                                     candidate_impl=self.candidate_impl)
-            self._finish_call()
+            st.blocks = 1
+            self._finish_call(st)
             return [emit_block(b"", [], [], [], [], 0)]
+        if self.shards is not None:
+            from repro.distributed import fabric
+
+            try:
+                with obs.span_factory(self._obs_on())(
+                        "compress.total", bytes_in=len(data), framing=False,
+                        shards=self.shards):
+                    blocks = fabric.shard_blocks_sharded(self, data, st)
+                st.bytes_out = sum(len(b) for b in blocks)
+                return blocks
+            finally:
+                self._finish_call(st)
         try:
             with obs.span_factory(self._obs_on())(
                     "compress.total", bytes_in=len(data), framing=False):
                 blocks = [payload_fn() for _, _, _, payload_fn
-                          in self._payload_iter(data)]
-            self.stats.bytes_out = sum(len(b) for b in blocks)
+                          in self._payload_iter(data, st)]
+            st.bytes_out = sum(len(b) for b in blocks)
             return blocks
         finally:
-            self._finish_call()
+            self._finish_call(st)
 
     def decompress(self, frame: bytes) -> bytes:
         """Inverse of `compress`; validates the frame (sizes + checksums)

@@ -21,11 +21,29 @@ uncompressible block stored raw (payload == original bytes, csize == usize).
 Payloads are concatenated in block order immediately after the table.
 Version 2 adds a CRC32 of each block's *uncompressed* content, so any stored
 corruption — including a flipped literal byte that still parses — is detected
-at decode time instead of surfacing as silent wrong output.  Version 3 (the
-current writer default) additionally records the TOTAL content size in the
-header; `frame_info` cross-checks it against the block table's usize sum, so
-a corrupted table (or header) is rejected before any payload is decoded and
-readers can size output buffers from the header alone.
+at decode time instead of surfacing as silent wrong output.  Version 3
+additionally records the TOTAL content size in the header; `frame_info`
+cross-checks it against the block table's usize sum, so a corrupted table
+(or header) is rejected before any payload is decoded and readers can size
+output buffers from the header alone.
+
+Version 4 (the sharded-fabric container, written by a sharded `LZ4Engine`)
+adds a `shard_count` header field and a per-entry `shard` id recording which
+mesh shard produced each block:
+
+    frame  := magic(4) | version=4 | block_count(u32 LE)
+              | content_size(u64 LE) | shard_count(u32 LE)
+              | table | payloads
+    entry  := usize(u32) | csize_flag(u32) | crc32(u32) | shard(u32)
+
+Blocks stay in GLOBAL content order (shards compress contiguous slices of
+the block stack, so concatenating per-shard outputs in shard order preserves
+it); the shard column is provenance plus a validation surface.  A reader
+MUST reject a shard id >= shard_count and a shard column that ever
+decreases — per-shard runs are contiguous by construction, so an
+out-of-order entry means the table was corrupted or the merge was wrong.
+Seekability is unchanged: the cumulative usize sum still maps any
+decompressed range to covering blocks regardless of shard boundaries.
 
 The block table is a public seek index (Rapidgzip-style, arXiv 2308.08955):
 blocks are compressed independently, `frame_info` exposes each block's
@@ -59,12 +77,16 @@ MAGIC = b"LZ4R"
 VERSION_V1 = 1
 VERSION_V2 = 2
 VERSION_V3 = 3
-VERSION = VERSION_V3  # current writer version (checksums + content size)
+VERSION_V4 = 4
+VERSION = VERSION_V3  # unsharded writer version (checksums + content size)
 RAW_FLAG = 0x80000000
 _HEADER = struct.Struct("<4sBI")
-_CONTENT_SIZE = struct.Struct("<Q")  # v3: total uncompressed size
+_CONTENT_SIZE = struct.Struct("<Q")  # v3/v4: total uncompressed size
+_SHARD_COUNT = struct.Struct("<I")   # v4: shard count
 _ENTRY_V1 = struct.Struct("<II")
-_ENTRY_V2 = struct.Struct("<III")  # also the v3 entry
+_ENTRY_V2 = struct.Struct("<III")   # also the v3 entry
+_ENTRY_V4 = struct.Struct("<IIII")  # v2 entry + producing shard id
+_ALL_VERSIONS = (VERSION_V1, VERSION_V2, VERSION_V3, VERSION_V4)
 
 
 class FrameFormatError(LZ4FormatError):
@@ -80,7 +102,9 @@ def block_crc(data: bytes) -> int:
 def encode_frame(payloads: list[bytes], usizes: list[int],
                  raw_flags: list[bool],
                  checksums: list[int] | None = None,
-                 content_size: bool = True) -> bytes:
+                 content_size: bool = True,
+                 shards: list[int] | None = None,
+                 shard_count: int | None = None) -> bytes:
     """Assemble a frame from per-block payloads.
 
     payloads  : compressed block bytes (or raw input bytes where flagged)
@@ -92,18 +116,43 @@ def encode_frame(payloads: list[bytes], usizes: list[int],
     content_size : write the total uncompressed size into the header
                 (version 3; requires checksums).  ``False`` produces a
                 version-2 frame, byte-identical to the pre-v3 writer.
+    shards    : per-block producing-shard ids (the sharded fabric's merge
+                stage).  When given the frame is written as version 4:
+                ids must be non-decreasing (shards own contiguous block
+                runs) and < ``shard_count``.  Requires checksums +
+                content_size.
+    shard_count : total shard count recorded in the v4 header; defaults to
+                ``max(shards) + 1`` (``1`` for an empty frame).  May exceed
+                the largest id present — trailing shards can own zero
+                blocks when the stack does not divide.
     """
     if not (len(payloads) == len(usizes) == len(raw_flags)):
         raise ValueError("payloads/usizes/raw_flags length mismatch")
     if checksums is not None and len(checksums) != len(payloads):
         raise ValueError("checksums length mismatch")
-    if checksums is None:
+    if shards is not None:
+        if checksums is None or not content_size:
+            raise ValueError("version-4 frames require checksums + content_size")
+        if len(shards) != len(payloads):
+            raise ValueError("shards length mismatch")
+        if shard_count is None:
+            shard_count = (max(shards) + 1) if shards else 1
+        if shard_count < 1:
+            raise ValueError("shard_count must be >= 1")
+        if any(s1 < s0 for s0, s1 in zip(shards, shards[1:])):
+            raise ValueError("shard ids must be non-decreasing")
+        if shards and (shards[0] < 0 or shards[-1] >= shard_count):
+            raise ValueError("shard id out of range")
+        version = VERSION_V4
+    elif checksums is None:
         version = VERSION_V1
     else:
         version = VERSION_V3 if content_size else VERSION_V2
     parts = [_HEADER.pack(MAGIC, version, len(payloads))]
-    if version == VERSION_V3:
+    if version in (VERSION_V3, VERSION_V4):
         parts.append(_CONTENT_SIZE.pack(sum(usizes)))
+    if version == VERSION_V4:
+        parts.append(_SHARD_COUNT.pack(shard_count))
     for i, (payload, usize, raw) in enumerate(zip(payloads, usizes, raw_flags)):
         if not 0 <= usize <= MAX_BLOCK:
             raise ValueError(f"block uncompressed size {usize} out of range")
@@ -112,7 +161,10 @@ def encode_frame(payloads: list[bytes], usizes: list[int],
         if len(payload) >= RAW_FLAG:
             raise ValueError("block payload too large")
         cf = len(payload) | (RAW_FLAG if raw else 0)
-        if checksums is None:
+        if version == VERSION_V4:
+            parts.append(_ENTRY_V4.pack(usize, cf, checksums[i] & 0xFFFFFFFF,
+                                        shards[i]))
+        elif checksums is None:
             parts.append(_ENTRY_V1.pack(usize, cf))
         else:
             parts.append(_ENTRY_V2.pack(usize, cf, checksums[i] & 0xFFFFFFFF))
@@ -120,48 +172,82 @@ def encode_frame(payloads: list[bytes], usizes: list[int],
     return b"".join(parts)
 
 
-def frame_info(frame: bytes) -> dict:
+def frame_info(frame: bytes, max_version: int | None = None) -> dict:
     """Parse and validate the header/table; returns block metadata.
 
     Raises FrameFormatError without touching any payload bytes.  Each block
     dict carries the seek-index fields: `usize`, `csize`, `raw`, payload
-    `offset` into the frame, and `crc` (None for version-1 frames).  The
-    result's `content_size` is the version-3 header total (None for older
+    `offset` into the frame, `crc` (None for version-1 frames), and `shard`
+    (the producing shard for version-4 frames, None before).  The result's
+    `content_size` is the version-3/4 header total (None for older
     versions), already validated against the table's usize sum — so a
-    corrupted table or header field is caught BEFORE any payload decode.
+    corrupted table or header field is caught BEFORE any payload decode;
+    `shard_count` is the version-4 shard total (None before), with every
+    table shard id validated in-range and non-decreasing.
+
+    ``max_version`` pins the reader's format horizon: a deployment still
+    running the version-3 reader rejects version-4 frames outright instead
+    of misparsing the wider table (tests assert this guard), exactly as the
+    pre-v4 code did via its version allowlist.
     """
     if len(frame) < _HEADER.size:
         raise FrameFormatError("truncated frame header")
     magic, version, count = _HEADER.unpack_from(frame, 0)
     if magic != MAGIC:
         raise FrameFormatError(f"bad magic {magic!r}")
-    if version not in (VERSION_V1, VERSION_V2, VERSION_V3):
+    if version not in _ALL_VERSIONS:
         raise FrameFormatError(f"unsupported frame version {version}")
+    if max_version is not None and version > max_version:
+        raise FrameFormatError(
+            f"frame version {version} > reader max_version {max_version}"
+        )
     table_start = _HEADER.size
     content_size = None
-    if version == VERSION_V3:
+    shard_count = None
+    if version in (VERSION_V3, VERSION_V4):
         if len(frame) < table_start + _CONTENT_SIZE.size:
             raise FrameFormatError("truncated content-size header")
         (content_size,) = _CONTENT_SIZE.unpack_from(frame, table_start)
         table_start += _CONTENT_SIZE.size
-    entry = _ENTRY_V1 if version == VERSION_V1 else _ENTRY_V2
+    if version == VERSION_V4:
+        if len(frame) < table_start + _SHARD_COUNT.size:
+            raise FrameFormatError("truncated shard-count header")
+        (shard_count,) = _SHARD_COUNT.unpack_from(frame, table_start)
+        table_start += _SHARD_COUNT.size
+        if shard_count < 1:
+            raise FrameFormatError("shard_count must be >= 1")
+    entry = {VERSION_V1: _ENTRY_V1, VERSION_V4: _ENTRY_V4}.get(version,
+                                                               _ENTRY_V2)
     table_end = table_start + count * entry.size
     if len(frame) < table_end:
         raise FrameFormatError("truncated block table")
     blocks = []
     off = table_end
+    prev_shard = 0
     for i in range(count):
         fields = entry.unpack_from(frame, table_start + i * entry.size)
         usize, cf = fields[0], fields[1]
         crc = fields[2] if version != VERSION_V1 else None
+        shard = fields[3] if version == VERSION_V4 else None
         raw = bool(cf & RAW_FLAG)
         csize = cf & ~RAW_FLAG
         if usize > MAX_BLOCK:
             raise FrameFormatError(f"block {i}: usize {usize} > {MAX_BLOCK}")
         if raw and csize != usize:
             raise FrameFormatError(f"block {i}: raw csize {csize} != usize {usize}")
+        if shard is not None:
+            if shard >= shard_count:
+                raise FrameFormatError(
+                    f"block {i}: shard {shard} >= shard_count {shard_count}"
+                )
+            if shard < prev_shard:
+                raise FrameFormatError(
+                    f"block {i}: shard {shard} after shard {prev_shard} — "
+                    "shard runs must be contiguous and in order"
+                )
+            prev_shard = shard
         blocks.append({"usize": usize, "csize": csize, "raw": raw,
-                       "offset": off, "crc": crc})
+                       "offset": off, "crc": crc, "shard": shard})
         off += csize
     if off != len(frame):
         raise FrameFormatError(
@@ -174,7 +260,7 @@ def frame_info(frame: bytes) -> dict:
                 f"content size {content_size} != block-table total {total}"
             )
     return {"version": version, "block_count": count, "blocks": blocks,
-            "content_size": content_size}
+            "content_size": content_size, "shard_count": shard_count}
 
 
 def check_block(i: int, usize: int, crc: int | None, data: bytes) -> None:

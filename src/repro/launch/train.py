@@ -73,6 +73,16 @@ def train(args) -> dict:
     restart = RestartPolicy()
     monitor = StepMonitor()
     os.makedirs(args.ckpt_dir, exist_ok=True)
+    # --shard-compress N: checkpoint leaves compress through the sharded
+    # fabric (host-partition path here — block bytes are identical to a
+    # mesh run, see distributed/fabric.py — so single-process drills
+    # exercise the same container the fleet writes).  getattr: callers that
+    # build their own args namespace predate the flag.
+    ckpt_engine = None
+    if getattr(args, "shard_compress", None):
+        from repro.core.engine import LZ4Engine
+
+        ckpt_engine = LZ4Engine(shards=args.shard_compress)
     pipe = ShardedTokenPipeline(
         os.path.join(args.ckpt_dir, "data"), cfg.vocab_size, seed=args.seed
     )
@@ -132,7 +142,7 @@ def train(args) -> dict:
                 if step % args.ckpt_every == 0 or step == args.steps:
                     ckpt.save(
                         args.ckpt_dir, step, {"params": params, "opt": opt_state},
-                        async_write=args.async_ckpt,
+                        async_write=args.async_ckpt, engine=ckpt_engine,
                     )
             except SimulatedFailure as e:
                 wait = restart.record_failure()
@@ -170,6 +180,9 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true", default=True)
     ap.add_argument("--async-ckpt", action="store_true")
     ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--shard-compress", type=int, default=None, metavar="N",
+                    help="compress checkpoints through the sharded fabric "
+                         "with N shards (host-partition path)")
     ap.add_argument("--simulate-failure", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)

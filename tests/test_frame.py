@@ -263,9 +263,9 @@ def test_engine_one_dispatch_per_micro_batch(monkeypatch):
     calls = []
     orig = LZ4Engine._dispatch
 
-    def spy(self, stack, ns):
+    def spy(self, stack, ns, st):
         calls.append(stack.shape[0])
-        return orig(self, stack, ns)
+        return orig(self, stack, ns, st)
 
     monkeypatch.setattr(LZ4Engine, "_dispatch", spy)
     data = b"spam and eggs " * 24000  # 5 blocks + change
@@ -283,8 +283,69 @@ def test_engine_pads_partial_batch_to_pow2(monkeypatch):
     orig = LZ4Engine._dispatch
     monkeypatch.setattr(
         LZ4Engine, "_dispatch",
-        lambda self, stack, ns: shapes.append(stack.shape[0]) or orig(self, stack, ns),
+        lambda self, stack, ns, st:
+            shapes.append(stack.shape[0]) or orig(self, stack, ns, st),
     )
     data = b"ham " * 50000  # 200_000 bytes -> 4 blocks
     assert decode_frame(eng.compress(data)) == data
     assert shapes == [4]  # padded to the next power of two, not to 32
+
+
+# ---------------------------------------------------------------------------
+# Frame v4 (sharded container) units.
+# ---------------------------------------------------------------------------
+
+class TestFrameV4:
+    def _frame(self, shards=(0, 0, 1, 2), shard_count=None):
+        from repro.core import block_crc
+
+        payloads = [b"%d" % i * (i + 1) for i in range(len(shards))]
+        usizes = [len(p) for p in payloads]
+        return encode_frame(
+            payloads, usizes, [True] * len(shards),
+            checksums=[block_crc(p) for p in payloads],
+            shards=list(shards), shard_count=shard_count)
+
+    def test_v4_header_and_table(self):
+        frame = self._frame()
+        info = frame_info(frame)
+        assert info["version"] == 4
+        assert info["shard_count"] == 3
+        assert [b["shard"] for b in info["blocks"]] == [0, 0, 1, 2]
+        assert info["content_size"] == sum(b["usize"] for b in info["blocks"])
+
+    def test_shard_count_defaults_to_max_plus_one(self):
+        assert frame_info(self._frame(shards=(0, 1)))["shard_count"] == 2
+
+    def test_trailing_empty_shards_allowed(self):
+        info = frame_info(self._frame(shards=(0, 0, 0, 1), shard_count=8))
+        assert info["shard_count"] == 8
+
+    def test_pre_v4_blocks_have_no_shard(self):
+        v3 = LZ4Engine().compress(b"abc" * 100)
+        info = frame_info(v3)
+        assert info["shard_count"] is None
+        assert all(b["shard"] is None for b in info["blocks"])
+
+    def test_v4_decodes_with_all_readers(self):
+        from repro.core import LZ4DecodeEngine, decode_frame_serial
+
+        data = b"reader parity " * 15000  # 4 blocks
+        frame = LZ4Engine(shards=2).compress(data)
+        assert frame_info(frame)["version"] == 4
+        assert decode_frame(frame) == data
+        assert decode_frame_serial(frame) == data
+        assert decode_frame_serial(frame, bytewise=True) == data
+        assert LZ4DecodeEngine(executor="device").decode(frame) == data
+
+    def test_max_version_guard(self):
+        frame = self._frame()
+        with pytest.raises(FrameFormatError, match="max_version"):
+            frame_info(frame, max_version=3)
+        assert frame_info(frame, max_version=4)["version"] == 4
+
+    def test_empty_v4(self):
+        frame = encode_frame([], [], [], checksums=[], shards=[])
+        info = frame_info(frame)
+        assert info["version"] == 4 and info["shard_count"] == 1
+        assert decode_frame(frame) == b""

@@ -157,3 +157,152 @@ def test_corruption_never_hangs_or_overallocates(frames):
         if bytes(mutant) == frame:
             continue
         _assert_rejected(bytes(mutant), f"zeros: rewrite {pos}", original=data)
+
+
+# ---------------------------------------------------------------------------
+# Frame v4 (sharded container): the shard table is a validation surface too.
+# ---------------------------------------------------------------------------
+
+# v4 header: 9-byte base + 8-byte content size + 4-byte shard count.
+_V4_TABLE = 9 + 8 + 4
+_V4_ENTRY = 16  # usize | csize_flag | crc32 | shard
+
+
+@pytest.fixture(scope="module")
+def v4_frames():
+    rng = _rng()
+    eng = LZ4Engine(micro_batch=4, shards=3)
+    corpora = {
+        "multi": b"the quick brown fox " * 9000,                 # 3 blocks
+        "mix": (b"pattern! " * 8000
+                + rng.integers(0, 256, MAX_BLOCK, np.uint8).tobytes()),
+        "uneven": b"sharded fabric " * 20000,                    # 5 blocks / 3
+    }
+    out = {}
+    for name, data in corpora.items():
+        frame = eng.compress(data)
+        from repro.core import frame_info
+        assert frame_info(frame)["version"] == 4
+        assert decode_frame(frame) == data
+        out[name] = (data, frame)
+    return out
+
+
+@pytest.mark.parametrize("name", ["multi", "mix", "uneven"])
+def test_v4_byte_flips_always_detected(v4_frames, name):
+    data, frame = v4_frames[name]
+    for pos in _flip_positions(len(frame)):
+        for mask in (0x01, 0x80, 0xFF):
+            mutant = bytearray(frame)
+            mutant[pos] ^= mask
+            _assert_rejected(bytes(mutant), f"v4 {name}: flip {pos}^{mask:#x}",
+                             original=data)
+
+
+@pytest.mark.parametrize("name", ["multi", "mix", "uneven"])
+def test_v4_truncations_always_detected(v4_frames, name):
+    _, frame = v4_frames[name]
+    n = len(frame)
+    cuts = set(range(0, _V4_TABLE + 4 * _V4_ENTRY)) | \
+        set(range(0, n, max(1, n // 150))) | {n - 1}
+    for cut in sorted(c for c in cuts if c < n):
+        _assert_rejected(frame[:cut], f"v4 {name}: truncate to {cut}")
+
+
+def test_v4_shard_table_flips_detected(v4_frames):
+    """Flips confined to the shard COLUMN of the table: shard ids have no
+    checksum of their own, so the structural rules (id < shard_count,
+    non-decreasing) are what catch them.  A flip that happens to produce
+    another valid non-decreasing in-range column (e.g. 0->1 in [0,1,2]) is
+    undetectable BY DESIGN — provenance metadata, content untouched — and
+    must then decode to exactly the original bytes, never crash."""
+    data, frame = v4_frames["multi"]
+    from repro.core import frame_info
+
+    info = frame_info(frame)
+    count = info["block_count"]
+    shard_count = info["shard_count"]
+    column = [b["shard"] for b in info["blocks"]]
+    rejected = 0
+    for i in range(count):
+        shard_field = _V4_TABLE + i * _V4_ENTRY + 12
+        for delta in (1, 2, 0x80, 0xFF):
+            mutated = list(column)
+            mutated[i] ^= delta
+            mutant = bytearray(frame)
+            mutant[shard_field] ^= delta
+            still_valid = (
+                all(0 <= s < shard_count for s in mutated)
+                and all(a <= b for a, b in zip(mutated, mutated[1:]))
+            )
+            if still_valid:
+                assert decode_frame(bytes(mutant)) == data
+            else:
+                rejected += 1
+                _assert_rejected(bytes(mutant),
+                                 f"v4: shard[{i}] ^= {delta:#x}")
+    assert rejected > 0  # the sweep must actually exercise the reject path
+
+
+def test_v4_shard_count_mismatch_detected(v4_frames):
+    """shard_count header vs table ids: too-small counts make ids
+    out-of-range; zero is structurally invalid; huge counts stay valid
+    (trailing shards may own no blocks) but must not crash."""
+    data, frame = v4_frames["multi"]
+    sc_off = 9 + 8
+    for bad in (0, 1, 2):  # table holds ids 0..2 -> counts < 3 all invalid
+        mutant = bytearray(frame)
+        mutant[sc_off: sc_off + 4] = int(bad).to_bytes(4, "little")
+        _assert_rejected(bytes(mutant), f"v4: shard_count={bad}")
+    big = bytearray(frame)
+    big[sc_off: sc_off + 4] = (1000).to_bytes(4, "little")
+    assert decode_frame(bytes(big)) == data  # ids 0..2 < 1000: still valid
+
+
+def test_v4_out_of_order_shards_detected(v4_frames):
+    """Shard runs are contiguous by construction; a decreasing shard column
+    means a corrupted table or a broken merge — never silent."""
+    data, frame = v4_frames["multi"]
+    from repro.core import frame_info
+
+    count = frame_info(frame)["block_count"]
+    assert count >= 2
+    mutant = bytearray(frame)
+    # swap the shard ids of the first and last blocks (0 and shards-1)
+    first = _V4_TABLE + 12
+    last = _V4_TABLE + (count - 1) * _V4_ENTRY + 12
+    mutant[first: first + 4], mutant[last: last + 4] = (
+        mutant[last: last + 4], mutant[first: first + 4])
+    _assert_rejected(bytes(mutant), "v4: out-of-order shard column")
+
+
+def test_v3_reader_rejects_v4(v4_frames):
+    """A deployment pinned to the v3 reader must reject v4 frames outright
+    (max_version guard) rather than misparse the wider table."""
+    from repro.core import frame_info
+    _, frame = v4_frames["multi"]
+    with pytest.raises(FrameFormatError, match="max_version"):
+        frame_info(frame, max_version=3)
+    # and the guard is inclusive: v3 frames still pass it
+    v3 = LZ4Engine().compress(b"still v3 " * 100)
+    assert frame_info(v3, max_version=3)["version"] == 3
+
+
+def test_v4_encode_validation():
+    """The writer enforces the same invariants the reader checks."""
+    from repro.core import block_crc, encode_frame
+
+    payload, usize = b"x" * 10, 10
+    crc = block_crc(payload)
+    args = dict(checksums=[crc, crc], content_size=True)
+    ok = encode_frame([payload] * 2, [usize] * 2, [True] * 2,
+                      shards=[0, 1], **args)
+    assert decode_frame_serial(ok) == payload * 2
+    with pytest.raises(ValueError, match="non-decreasing"):
+        encode_frame([payload] * 2, [usize] * 2, [True] * 2,
+                     shards=[1, 0], **args)
+    with pytest.raises(ValueError, match="out of range"):
+        encode_frame([payload] * 2, [usize] * 2, [True] * 2,
+                     shards=[0, 5], shard_count=2, **args)
+    with pytest.raises(ValueError, match="checksums"):
+        encode_frame([payload], [usize], [True], shards=[0])

@@ -429,3 +429,37 @@ def test_trace_report_empty_trace_fails_check(tmp_path):
         {"schema_version": 1,
          "metrics": {"counters": {}, "gauges": {}, "histograms": {}}}))
     assert trace_report.main([str(empty), "--check"]) == 1
+
+
+def test_totals_exact_under_concurrent_engine_use():
+    """`engine.totals` must not lose updates when one engine instance is
+    shared across threads (the serving-offload pattern: many requests, one
+    `default_engine()`).  Each call carries its own per-call stats object;
+    the engine folds them into `totals` under a lock — so the lifetime
+    counters are EXACT, not approximately right."""
+    from repro.core import LZ4DecodeEngine, LZ4Engine
+
+    data = _data()
+    n_threads, calls_per_thread = 8, 6
+    eng = LZ4Engine(micro_batch=8)
+    frame = eng.compress(data)  # warm the jit cache outside the timed region
+    base_calls = eng.totals.calls
+    base_bytes = eng.totals.bytes_in
+
+    with ThreadPoolExecutor(n_threads) as pool:
+        frames = list(pool.map(
+            lambda _: eng.compress(data), range(n_threads * calls_per_thread)))
+    assert all(f == frame for f in frames)  # concurrency never changes bytes
+    n = n_threads * calls_per_thread
+    assert eng.totals.calls == base_calls + n
+    assert eng.totals.bytes_in == base_bytes + n * len(data)
+
+    dec = LZ4DecodeEngine()
+    dec.decode(frame)
+    dbase = dec.totals.calls
+    with ThreadPoolExecutor(n_threads) as pool:
+        outs = list(pool.map(
+            lambda _: dec.decode(frame), range(n_threads * calls_per_thread)))
+    assert all(o == data for o in outs)
+    assert dec.totals.calls == dbase + n
+    assert dec.totals.bytes_out == (dbase + n) * len(data)
