@@ -20,7 +20,14 @@ Compares, on a multi-block corpus frame (round-trip verified):
     `decode_to_device` restore path (0 with verification deferred) —
     transfer symmetry with `BENCH_engine_batched.json`'s `host_transfer`.
     On this CPU container the "device" is the host, so the numbers are
-    bookkeeping, not the accelerator end-state (see docs/tuning.md).
+    bookkeeping, not the accelerator end-state (see docs/tuning.md);
+  * engine device specplan — `executor="device", plan_on_device=True`:
+    the speculative in-graph planner (PR 9) replaces the host
+    `plan_block_fast` walk, so plan+execute+CRC is one fused jit dispatch
+    per micro-batch.  The `plan_stage` JSON section times the retired
+    host O(n) stage (`plan_block_fast` over every compressed payload) so
+    the ledger shows exactly what left the host, and asserts the
+    restore-path `host_bytes` stays 0 *including planning*.
 
 Configs are timed INTERLEAVED (one rep of each per round, min over rounds)
 so CPU-frequency noise hits every config equally.  The random-access
@@ -94,6 +101,8 @@ def run(fast: bool = True) -> dict:
     engines["engine_device"] = LZ4DecodeEngine(executor="device")
     engines["engine_device_static"] = LZ4DecodeEngine(
         executor="device", adaptive_rounds=False)
+    engines["engine_device_specplan"] = LZ4DecodeEngine(
+        executor="device", plan_on_device=True)
     for name, eng in engines.items():
         configs[name] = (lambda e: lambda: e.decode(frame))(eng)
 
@@ -155,6 +164,46 @@ def run(fast: bool = True) -> dict:
         "host_bytes": dev_stats.host_bytes,          # == decoded payload
         "to_device_ms": round(to_device_s * 1000, 1),
         "to_device_host_bytes": 0,                   # asserted above
+    }
+
+    # -- speculative in-graph planning: the retired host O(n) stage ---------
+    # Time plan_block_fast (the serial token-stream walk the speculative
+    # planner replaces) over every compressed payload, then put the fused
+    # specplan engine's ledger next to it: same decode, zero host planning.
+    from repro.core.decode_plan import plan_block_fast
+    from repro.core.frame import frame_info
+
+    info = frame_info(frame)
+    payloads = [frame[b["offset"]: b["offset"] + b["csize"]]
+                for b in info["blocks"] if not b["raw"]]
+    host_plan_s = float("inf")
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        for p in payloads:
+            plan_block_fast(p)
+        host_plan_s = min(host_plan_s, time.perf_counter() - t0)
+
+    spec = engines["engine_device_specplan"]
+    assert spec.decode(frame) == data
+    spec_stats = spec.stats
+    assert spec_stats.fallback_blocks == 0, "specplan fell back on corpus"
+    t0 = time.perf_counter()
+    arr = spec.decode_to_device(frame, verify=False)
+    arr.block_until_ready()
+    spec_to_device_s = time.perf_counter() - t0
+    assert spec.stats.host_bytes == 0, \
+        "specplan decode_to_device touched host bytes (planning leaked?)"
+    out["plan_stage"] = {
+        "compressed_blocks": len(payloads),
+        "host_plan_ms": round(host_plan_s * 1000, 1),     # the retired stage
+        "specplan_ms": out["configs"]["engine_device_specplan"]["ms"],
+        "specplan_mbps": out["configs"]["engine_device_specplan"]["mbps"],
+        "dispatches": spec_stats.dispatches,
+        "device_blocks": spec_stats.device_blocks,
+        "fallback_blocks": spec_stats.fallback_blocks,     # asserted 0
+        "host_bytes": spec_stats.host_bytes,               # == decoded payload
+        "to_device_ms": round(spec_to_device_s * 1000, 1),
+        "to_device_host_bytes": 0,                         # asserted above
     }
 
     # -- random access: read_range vs full-decode-then-slice ----------------

@@ -51,8 +51,10 @@ from .frame import (  # noqa: F401
     VERSION_V2,
     VERSION_V3,
     VERSION_V4,
+    VERSION_V5,
     FrameFormatError,
     block_crc,
+    check_content_crc,
     decode_frame,
     decode_frame_serial,
     encode_frame,

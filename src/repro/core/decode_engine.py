@@ -39,6 +39,17 @@ embarrassingly parallel (Sitaridi et al., arXiv 1606.00519):
                    restores fetch no content).  Blocks whose
                    plans overflow the fixed caps fall back to the host
                    executor per block (counted in `fallback_blocks`).
+                   With ``plan_on_device=True`` phase ONE moves in-graph
+                   too: the speculative planner
+                   (`kernels.plan_speculative`, validated/compacted by
+                   `kernels.ops.plan_speculative`) parses the token
+                   stream on device and `kernels.ops.plan_decode` fuses
+                   plan + gather + CRC into a single dispatch — the last
+                   host O(n) stage is gone, and `host_bytes == 0` on the
+                   to-device paths now includes planning.  Malformed or
+                   caps-overflowing blocks surface through a 5-lane
+                   status vector; overflows replan on host (counted),
+                   parse errors raise the host planner's exact message.
 
   * version-2 frames carry per-block CRC32s of the uncompressed content,
     verified as each block lands, so corruption is caught at the block that
@@ -66,6 +77,7 @@ import numpy as np
 from repro import obs
 
 from .decode_plan import (
+    _ERR_MESSAGES,
     MAX_RESOLVE_ROUNDS,
     DevicePlanCaps,
     DevicePlanOverflow,
@@ -74,7 +86,13 @@ from .decode_plan import (
     to_device_plan,
 )
 from .decoder import LZ4FormatError, decode_block
-from .frame import FrameFormatError, check_block, frame_info
+from .frame import (
+    FrameFormatError,
+    block_crc,
+    check_block,
+    check_content_crc,
+    frame_info,
+)
 from .lz4_types import MAX_BLOCK, pad_pow2_count
 
 __all__ = ["LZ4DecodeEngine", "DecodeStats", "FrameReader",
@@ -95,6 +113,35 @@ def _device_decode_compiled(out_cap: int, rounds: int, use_pallas: bool):
     fn = functools.partial(decode_gather, out_cap=out_cap, rounds=rounds,
                            use_pallas=use_pallas)
     return jax.jit(jax.vmap(fn))
+
+
+@functools.lru_cache(maxsize=None)
+def _device_plan_decode_compiled(out_cap: int, max_lit: int, max_match: int,
+                                 rounds: int, use_pallas: bool,
+                                 compute_crc: bool):
+    """Jitted vmap of the FUSED plan+decode(+CRC) graph (`kernels.ops.
+    plan_decode`) — the speculative-planning twin of
+    `_device_decode_compiled`.  One dispatch takes a stacked micro-batch of
+    raw compressed payloads and returns decoded rows, per-block status
+    vectors, and in-graph checksums: no token stream is ever parsed on
+    host."""
+    import jax
+
+    from repro.kernels.ops import plan_decode
+
+    fn = functools.partial(plan_decode, out_cap=out_cap, max_lit=max_lit,
+                           max_match=max_match, rounds=rounds,
+                           use_pallas=use_pallas, compute_crc=compute_crc)
+    return jax.jit(jax.vmap(fn))
+
+
+def _spec_err_message(code: int) -> str:
+    """Map a speculative-planner status code to the host planner's exact
+    error message (codes 1..8 are `_ERR_MESSAGES`; 9 is the serial parser's
+    missing-token error — parity asserted in tests/test_plan_speculative.py)."""
+    if code == 9:
+        return "truncated block: missing token"
+    return _ERR_MESSAGES.get(code, f"invalid stream (status {code})")
 
 
 def _round_bucket(rounds: int) -> int:
@@ -198,7 +245,10 @@ class DecodeStats:
     the decoded payload — rows are slice-fetched to their true usize — or
     zero for a `decode_to_device` restore, which never leaves the
     accelerator: its CRC verification runs in-graph and syncs only a
-    4-byte checksum scalar, not counted here).
+    4-byte checksum scalar, not counted here).  With ``plan_on_device``
+    the zero covers PLANNING too — the speculative planner parses the
+    token stream in-graph, and only the per-row status vector (a few
+    int32 scalars per block, metadata like the CRC sync) crosses back.
     """
 
     blocks: int = 0
@@ -250,11 +300,14 @@ class LZ4DecodeEngine:
                  micro_batch: int = 8, use_pallas: bool = False,
                  caps: DevicePlanCaps | None = None,
                  adaptive_rounds: bool = True,
+                 plan_on_device: bool = False,
                  telemetry: bool | None = None,
                  mesh=None,
                  shard_axes: tuple[str, ...] | None = None):
         if executor is not None and executor not in _EXECUTORS:
             raise ValueError(f"executor must be one of {_EXECUTORS}")
+        if plan_on_device and executor != "device":
+            raise ValueError("plan_on_device requires executor='device'")
         if workers is not None and workers < 1:
             raise ValueError("workers must be >= 1")
         if micro_batch < 1:
@@ -295,6 +348,14 @@ class LZ4DecodeEngine:
         self.use_pallas = use_pallas
         self.caps = caps or DevicePlanCaps()
         self.adaptive_rounds = adaptive_rounds
+        # Speculative in-graph planning: parse the token stream ON DEVICE
+        # (kernels/plan_speculative.py) and fuse plan+execute(+CRC) into
+        # one dispatch per micro-batch — `plan_block_fast` runs only as the
+        # per-block fallback for payloads/plans that overflow the caps.
+        # `adaptive_rounds` has no effect on this path: with no host plan
+        # there is no `n_waves`, so the resolve always compiles
+        # MAX_RESOLVE_ROUNDS.
+        self.plan_on_device = plan_on_device
         # Per-block strategy: the fused chunked decoder wins single-threaded
         # on CPython (one loop, no plan materialization), the two-phase
         # plan/execute decoder releases the GIL through its NumPy phases and
@@ -435,7 +496,9 @@ class LZ4DecodeEngine:
             out = fabric.decode_items_sharded(self, items, st)
             st.bytes_out = sum(len(d) for d in out)
             return out
-        if self.executor == "device":
+        if self.executor == "device" and self.plan_on_device:
+            self._decode_blocks_specplan(payloads, raws, usizes, out, st)
+        elif self.executor == "device":
             jobs = []
             for i, (payload, raw) in enumerate(zip(payloads, raws)):
                 payload = bytes(payload)
@@ -559,6 +622,230 @@ class LZ4DecodeEngine:
         st.host_bytes += usize
         return data
 
+    # -- device executor: speculative in-graph planning ---------------------
+
+    def _dispatch_specplan(self, batch: list, st: DecodeStats,
+                           compute_crc: bool):
+        """ONE fused plan+decode jit dispatch for a micro-batch of raw
+        (payload, max_out) pairs — the speculative twin of
+        `_dispatch_device`, minus the host parse: payloads are stacked
+        as-is and the device does header decode, chain select, validation,
+        layout, resolve, and (optionally) CRC in a single graph.
+        """
+        import jax.numpy as jnp
+
+        from repro.kernels import ops as kops
+
+        sp = obs.span_factory(self._obs_on())
+        caps = self.caps
+        m = pad_pow2_count(len(batch), self.micro_batch)
+        blk = np.zeros((m, caps.blk_cap + kops.SPEC_PAD), np.uint8)
+        ns = np.zeros((m,), np.int32)
+        mo = np.zeros((m,), np.int32)
+        for j, (payload, max_out) in enumerate(batch):
+            blk[j, : len(payload)] = np.frombuffer(payload, np.uint8)
+            ns[j] = len(payload)
+            mo[j] = max_out
+        fn = _device_plan_decode_compiled(caps.out_cap, caps.max_lit,
+                                          caps.max_match, MAX_RESOLVE_ROUNDS,
+                                          self.use_pallas, compute_crc)
+        st.dispatches += 1
+        with sp("decode.plan_device", rows=len(batch), executor="device",
+                crc=compute_crc):
+            return fn(jnp.asarray(blk), jnp.asarray(ns), jnp.asarray(mo))
+
+    def _execute_specplan(self, jobs: list, finish, st: DecodeStats,
+                          compute_crc: bool) -> None:
+        """Micro-batched, double-buffered speculative execution.
+
+        ``jobs``: list of (slot, payload, max_out); ``finish(slot, payload,
+        stat, row, crc)`` consumes one block's host status vector (a
+        (SPEC_STATUS,) np.int32 — fetching it synchronizes the dispatch,
+        like `_fetch_row`; 20 bytes of metadata, uncounted by the content
+        ledger `host_bytes`), decoded device row, and device CRC scalar.
+        Batch i+1 is dispatched before batch i's statuses are fetched, so
+        stacking overlaps device compute exactly like `_execute_device`.
+        """
+        def drain(chunk, res):
+            out, status, crc = res
+            stat = np.asarray(status)
+            for row, (slot, payload, _max_out) in enumerate(chunk):
+                finish(slot, payload, stat[row], out[row], crc[row])
+
+        inflight = None
+        for start in range(0, len(jobs), self.micro_batch):
+            chunk = jobs[start: start + self.micro_batch]
+            res = self._dispatch_specplan(
+                [(p, mo) for _, p, mo in chunk], st, compute_crc)
+            if inflight is not None:
+                drain(*inflight)
+            inflight = (chunk, res)
+        if inflight is not None:
+            drain(*inflight)
+
+    def _decode_blocks_specplan(self, payloads, raws, usizes, out,
+                                st: DecodeStats) -> None:
+        """`decode_blocks` body for the speculative planner (fills `out`).
+
+        Error parity with the host-planner branch: parse errors raise the
+        planner's exact message unwrapped; a decoded-size mismatch against
+        a caller-provided usize raises ``block {i}: decoded ... expected``.
+        Payloads over `blk_cap` and plans over the fixed caps take the same
+        counted host fallback.
+        """
+        jobs = []
+        for i, (payload, raw) in enumerate(zip(payloads, raws)):
+            payload = bytes(payload)
+            if raw:
+                out[i] = payload
+                continue
+            usize = usizes[i] if usizes is not None else None
+            cap = usize if usize is not None else MAX_BLOCK
+            if len(payload) > self.caps.blk_cap:
+                st.fallback_blocks += 1
+                plan = plan_block_fast(payload, max_out=cap)
+                if usize is not None and plan.usize != usize:
+                    raise LZ4FormatError(
+                        f"block {i}: decoded {plan.usize} bytes, "
+                        f"expected {usize}"
+                    )
+                out[i] = execute_plan(payload, plan).tobytes()
+                continue
+            jobs.append((i, payload, cap))
+
+        from repro.kernels import ops as kops
+
+        def finish(slot, payload, stat, row, _crc):
+            err = int(stat[kops.SPEC_ERR])
+            if err:
+                raise LZ4FormatError(_spec_err_message(err))
+            usize = usizes[slot] if usizes is not None else None
+            if int(stat[kops.SPEC_OVERFLOW]):
+                st.fallback_blocks += 1
+                cap = usize if usize is not None else MAX_BLOCK
+                plan = plan_block_fast(payload, max_out=cap)
+                if usize is not None and plan.usize != usize:
+                    raise LZ4FormatError(
+                        f"block {slot}: decoded {plan.usize} bytes, "
+                        f"expected {usize}"
+                    )
+                out[slot] = execute_plan(payload, plan).tobytes()
+                return
+            out_size = int(stat[kops.SPEC_OUT_SIZE])
+            if usize is not None and out_size != usize:
+                raise LZ4FormatError(
+                    f"block {slot}: decoded {out_size} bytes, "
+                    f"expected {usize}"
+                )
+            st.device_blocks += 1
+            out[slot] = self._fetch_row(row, out_size, st)
+
+        self._execute_specplan(jobs, finish, st, compute_crc=False)
+
+    def _specplan_host_fallback(self, i: int, b: dict, payload: bytes,
+                                to_device: bool, st: DecodeStats, sp):
+        """Host plan+execute for one frame block the speculative path cannot
+        keep on device — payload over `blk_cap`, or a valid plan that
+        overflowed the fixed caps.  Same counted per-block fallback
+        semantics as the host planner's `DevicePlanOverflow` path,
+        including the plan-time size-vs-table parity check and the
+        unconditional post-decode `check_block`."""
+        st.fallback_blocks += 1
+        try:
+            with sp("decode.plan", bytes_in=len(payload), executor="device",
+                    fallback=True):
+                plan = plan_block_fast(payload, max_out=b["usize"])
+        except FrameFormatError:
+            raise
+        except LZ4FormatError as e:
+            raise FrameFormatError(f"block {i}: {e}") from e
+        if plan.usize != b["usize"]:
+            raise FrameFormatError(
+                f"block {i}: decoded {plan.usize} bytes, "
+                f"table says {b['usize']}"
+            )
+        with sp("decode.execute", block=i, fallback=True):
+            data = execute_plan(payload, plan).tobytes()
+        with sp("decode.verify", block=i):
+            check_block(i, b["usize"], b["crc"], data)
+        return self._host_result(data, to_device)
+
+    def _decode_entries_specplan(self, frame: bytes,
+                                 entries: list[tuple[int, dict]],
+                                 to_device: bool = False, verify: bool = True,
+                                 st: DecodeStats | None = None):
+        """`_decode_entries_device` with speculative in-graph planning.
+
+        The whole per-block pipeline — header parse, chain select,
+        validation, layout, resolve, CRC — runs as one fused dispatch per
+        micro-batch; the host touches only each block's (SPEC_STATUS,)
+        status vector.  With ``to_device=True`` the decoded content never
+        crosses device->host (the CRC comes from the same fused graph), so
+        `DecodeStats.host_bytes` stays 0 INCLUDING planning.  Error parity
+        with the host-planner path: parse errors raise
+        ``block {i}: <planner message>``, size mismatches raise the
+        ``table says`` message, caps overflows take the counted host
+        fallback.
+        """
+        if st is None:
+            st = self.stats
+        from repro.kernels import ops as kops
+
+        sp = obs.span_factory(self._obs_on())
+        meta = {}
+        out: list = [None] * len(entries)
+        jobs = []
+        pending_crc: list[tuple[int, object, int]] = []
+        for j, (i, b) in enumerate(entries):
+            payload = frame[b["offset"]: b["offset"] + b["csize"]]
+            if b["raw"]:
+                with sp("decode.verify", block=i, raw=True):
+                    check_block(i, b["usize"], b["crc"], payload)
+                out[j] = self._host_result(payload, to_device)
+                continue
+            if len(payload) > self.caps.blk_cap:
+                out[j] = self._specplan_host_fallback(
+                    i, b, payload, to_device, st, sp)
+                continue
+            meta[j] = (i, b)
+            jobs.append((j, payload, b["usize"]))
+
+        def finish(slot, payload, stat, row, crc):
+            i, b = meta[slot]
+            err = int(stat[kops.SPEC_ERR])
+            if err:
+                raise FrameFormatError(f"block {i}: {_spec_err_message(err)}")
+            if int(stat[kops.SPEC_OVERFLOW]):
+                out[slot] = self._specplan_host_fallback(
+                    i, b, payload, to_device, st, sp)
+                return
+            out_size = int(stat[kops.SPEC_OUT_SIZE])
+            if out_size != b["usize"]:
+                raise FrameFormatError(
+                    f"block {i}: decoded {out_size} bytes, "
+                    f"table says {b['usize']}"
+                )
+            st.device_blocks += 1
+            if to_device:
+                # The in-graph CRC scalar rides the fused dispatch; the
+                # host compare is DEFERRED so it never stalls the drain.
+                if verify and b["crc"] is not None:
+                    pending_crc.append((i, crc, b["crc"]))
+                out[slot] = row[:out_size]
+                return
+            data = self._fetch_row(row, out_size, st)
+            with sp("decode.verify", block=i):
+                check_block(i, b["usize"], b["crc"], data)
+            out[slot] = data
+
+        self._execute_specplan(jobs, finish, st,
+                               compute_crc=bool(to_device and verify))
+        with sp("decode.verify", blocks=len(pending_crc), in_graph=True):
+            for i, got, want in pending_crc:
+                if int(got) != want:
+                    raise FrameFormatError(f"block {i}: checksum mismatch")
+        return out
+
     # -- frames -------------------------------------------------------------
 
     def _decode_entries(self, frame: bytes, entries: list[tuple[int, dict]],
@@ -615,6 +902,9 @@ class LZ4DecodeEngine:
         """
         if st is None:
             st = self.stats
+        if self.plan_on_device:
+            return self._decode_entries_specplan(
+                frame, entries, to_device=to_device, verify=verify, st=st)
         if to_device and verify:
             from repro.kernels.ops import crc32_bytes  # already jitted
 
@@ -712,6 +1002,9 @@ class LZ4DecodeEngine:
                 parts = self._decode_entries(frame, list(enumerate(blocks)),
                                              st)
                 out = b"".join(parts)
+                # v5 whole-object trailer: per-block CRCs already passed,
+                # this catches join-order/table-swap corruption they can't.
+                check_content_crc(info["content_crc"], block_crc(out))
             st.bytes_out = len(out)
             return out
         finally:
@@ -744,16 +1037,33 @@ class LZ4DecodeEngine:
         )
         self.stats = st
         try:
-            with obs.span_factory(self._obs_on())(
-                    "decode.total", blocks=len(blocks), executor="device",
+            sp = obs.span_factory(self._obs_on())
+            with sp("decode.total", blocks=len(blocks), executor="device",
                     to_device=True, verify=verify):
                 parts = self._decode_entries_device(
                     frame, list(enumerate(blocks)), to_device=True,
                     verify=verify, st=st)
+                if not parts:
+                    out = jnp.zeros((0,), jnp.uint8)
+                else:
+                    out = parts[0] if len(parts) == 1 \
+                        else jnp.concatenate(parts)
+                if verify and info["content_crc"] is not None:
+                    # v5 whole-object trailer, checked IN-GRAPH over the
+                    # concatenated device array (pow2-padded so compiled
+                    # shapes stay bounded); like per-block verification,
+                    # only the 4-byte checksum crosses to host.
+                    from repro.kernels.ops import crc32_bytes
+
+                    total = int(out.shape[0])
+                    cap = 1 if total == 0 else 1 << (total - 1).bit_length()
+                    padded = out if cap == total else jnp.concatenate(
+                        [out, jnp.zeros((cap - total,), jnp.uint8)])
+                    with sp("decode.verify", content=True, in_graph=True):
+                        crc = int(crc32_bytes(padded, total))
+                    check_content_crc(info["content_crc"], crc)
             st.bytes_out = sum(b["usize"] for b in blocks)
-            if not parts:
-                return jnp.zeros((0,), jnp.uint8)
-            return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+            return out
         finally:
             self._finish_call(st)
 

@@ -156,6 +156,7 @@ class LZ4Engine:
                  donate: bool | None = None,
                  device_emit: bool = True,
                  drain: str = "sliced",
+                 content_crc: bool = False,
                  telemetry: bool | None = None,
                  mesh=None,
                  shard_axes: tuple[str, ...] | None = None,
@@ -220,6 +221,12 @@ class LZ4Engine:
         # buffer per micro-batch in one transfer (fewer, larger copies; the
         # pre-two-step behaviour, kept measurable in benchmarks).
         self.drain = drain
+        # content_crc=True: stamp a whole-object CRC32 trailer on every
+        # frame (version 5) on top of the per-block checksums — full-frame
+        # decoders verify the JOINED output too (frame.py docstring has the
+        # failure modes per-block checks cannot see).  Default off: the v3
+        # (or v4, sharded) writer stays byte-identical.
+        self.content_crc = content_crc
         # Telemetry: None follows the global `repro.obs` gate (REPRO_OBS /
         # obs.configure) at CALL time; True/False pins this instance.  The
         # resolved flag never changes frame bytes — it only decides whether
@@ -431,8 +438,10 @@ class LZ4Engine:
                     # integrity-checked container — decode verifies per block.
                     crcs.append(block_crc(chunk))
                 with sp("compress.frame", blocks=len(payloads)):
-                    frame = encode_frame(payloads, usizes, raws,
-                                         checksums=crcs)
+                    frame = encode_frame(
+                        payloads, usizes, raws, checksums=crcs,
+                        content_crc=block_crc(data) if self.content_crc
+                        else None)
                 st.bytes_out = len(frame)
                 return frame
         finally:

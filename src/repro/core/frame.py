@@ -45,6 +45,24 @@ out-of-order entry means the table was corrupted or the merge was wrong.
 Seekability is unchanged: the cumulative usize sum still maps any
 decompressed range to covering blocks regardless of shard boundaries.
 
+Version 5 appends a whole-object integrity trailer to the version-4 layout:
+
+    frame  := magic(4) | version=5 | block_count(u32 LE)
+              | content_size(u64 LE) | shard_count(u32 LE)
+              | table | payloads | content_crc(u32 LE)
+    entry  := usize(u32) | csize_flag(u32) | crc32(u32) | shard(u32)
+
+`content_crc` is the CRC32 of the CONCATENATED uncompressed content — a
+second, independent integrity surface over the whole object on top of the
+per-block CRCs (per-block checks cannot catch a table that swaps two
+equal-sized blocks' entries, or a reader bug that joins blocks in the
+wrong order).  Full-frame decoders (`decode_frame_serial`, the decode
+engine's `decode`/`decode_to_device`) verify it after the join; PARTIAL
+reads (`FrameReader.read_range`) deliberately skip it — they never
+materialise the whole object, which is the point of the seek index.
+Unsharded version-5 writers record `shard_count = 1` with every block on
+shard 0.
+
 The block table is a public seek index (Rapidgzip-style, arXiv 2308.08955):
 blocks are compressed independently, `frame_info` exposes each block's
 `usize`/`csize`/payload `offset` without touching payload bytes, and the
@@ -78,15 +96,17 @@ VERSION_V1 = 1
 VERSION_V2 = 2
 VERSION_V3 = 3
 VERSION_V4 = 4
+VERSION_V5 = 5
 VERSION = VERSION_V3  # unsharded writer version (checksums + content size)
 RAW_FLAG = 0x80000000
 _HEADER = struct.Struct("<4sBI")
-_CONTENT_SIZE = struct.Struct("<Q")  # v3/v4: total uncompressed size
-_SHARD_COUNT = struct.Struct("<I")   # v4: shard count
+_CONTENT_SIZE = struct.Struct("<Q")  # v3/v4/v5: total uncompressed size
+_SHARD_COUNT = struct.Struct("<I")   # v4/v5: shard count
 _ENTRY_V1 = struct.Struct("<II")
 _ENTRY_V2 = struct.Struct("<III")   # also the v3 entry
-_ENTRY_V4 = struct.Struct("<IIII")  # v2 entry + producing shard id
-_ALL_VERSIONS = (VERSION_V1, VERSION_V2, VERSION_V3, VERSION_V4)
+_ENTRY_V4 = struct.Struct("<IIII")  # v2 entry + producing shard id (v4/v5)
+_CONTENT_CRC = struct.Struct("<I")  # v5 trailer: whole-content CRC32
+_ALL_VERSIONS = (VERSION_V1, VERSION_V2, VERSION_V3, VERSION_V4, VERSION_V5)
 
 
 class FrameFormatError(LZ4FormatError):
@@ -104,7 +124,8 @@ def encode_frame(payloads: list[bytes], usizes: list[int],
                  checksums: list[int] | None = None,
                  content_size: bool = True,
                  shards: list[int] | None = None,
-                 shard_count: int | None = None) -> bytes:
+                 shard_count: int | None = None,
+                 content_crc: int | None = None) -> bytes:
     """Assemble a frame from per-block payloads.
 
     payloads  : compressed block bytes (or raw input bytes where flagged)
@@ -125,11 +146,22 @@ def encode_frame(payloads: list[bytes], usizes: list[int],
                 ``max(shards) + 1`` (``1`` for an empty frame).  May exceed
                 the largest id present — trailing shards can own zero
                 blocks when the stack does not divide.
+    content_crc : CRC32 of the CONCATENATED uncompressed content.  When
+                given the frame is written as version 5 — the version-4
+                layout plus a 4-byte trailer — and full-frame decoders
+                verify the joined output against it.  Requires checksums +
+                content_size; an unsharded version-5 frame records
+                ``shard_count = 1`` with every block on shard 0.
     """
     if not (len(payloads) == len(usizes) == len(raw_flags)):
         raise ValueError("payloads/usizes/raw_flags length mismatch")
     if checksums is not None and len(checksums) != len(payloads):
         raise ValueError("checksums length mismatch")
+    if content_crc is not None:
+        if checksums is None or not content_size:
+            raise ValueError("version-5 frames require checksums + content_size")
+        if shards is None:
+            shards = [0] * len(payloads)
     if shards is not None:
         if checksums is None or not content_size:
             raise ValueError("version-4 frames require checksums + content_size")
@@ -143,15 +175,15 @@ def encode_frame(payloads: list[bytes], usizes: list[int],
             raise ValueError("shard ids must be non-decreasing")
         if shards and (shards[0] < 0 or shards[-1] >= shard_count):
             raise ValueError("shard id out of range")
-        version = VERSION_V4
+        version = VERSION_V4 if content_crc is None else VERSION_V5
     elif checksums is None:
         version = VERSION_V1
     else:
         version = VERSION_V3 if content_size else VERSION_V2
     parts = [_HEADER.pack(MAGIC, version, len(payloads))]
-    if version in (VERSION_V3, VERSION_V4):
+    if version in (VERSION_V3, VERSION_V4, VERSION_V5):
         parts.append(_CONTENT_SIZE.pack(sum(usizes)))
-    if version == VERSION_V4:
+    if version in (VERSION_V4, VERSION_V5):
         parts.append(_SHARD_COUNT.pack(shard_count))
     for i, (payload, usize, raw) in enumerate(zip(payloads, usizes, raw_flags)):
         if not 0 <= usize <= MAX_BLOCK:
@@ -161,7 +193,7 @@ def encode_frame(payloads: list[bytes], usizes: list[int],
         if len(payload) >= RAW_FLAG:
             raise ValueError("block payload too large")
         cf = len(payload) | (RAW_FLAG if raw else 0)
-        if version == VERSION_V4:
+        if version in (VERSION_V4, VERSION_V5):
             parts.append(_ENTRY_V4.pack(usize, cf, checksums[i] & 0xFFFFFFFF,
                                         shards[i]))
         elif checksums is None:
@@ -169,6 +201,8 @@ def encode_frame(payloads: list[bytes], usizes: list[int],
         else:
             parts.append(_ENTRY_V2.pack(usize, cf, checksums[i] & 0xFFFFFFFF))
     parts.extend(bytes(p) for p in payloads)
+    if version == VERSION_V5:
+        parts.append(_CONTENT_CRC.pack(content_crc & 0xFFFFFFFF))
     return b"".join(parts)
 
 
@@ -182,8 +216,11 @@ def frame_info(frame: bytes, max_version: int | None = None) -> dict:
     `content_size` is the version-3/4 header total (None for older
     versions), already validated against the table's usize sum — so a
     corrupted table or header field is caught BEFORE any payload decode;
-    `shard_count` is the version-4 shard total (None before), with every
-    table shard id validated in-range and non-decreasing.
+    `shard_count` is the version-4/5 shard total (None before), with every
+    table shard id validated in-range and non-decreasing; `content_crc` is
+    the version-5 whole-content CRC32 trailer (None before v5) — exposed
+    for full-frame decoders to verify after the join, never checked here
+    (the header/table pass touches no payload bytes).
 
     ``max_version`` pins the reader's format horizon: a deployment still
     running the version-3 reader rejects version-4 frames outright instead
@@ -204,20 +241,20 @@ def frame_info(frame: bytes, max_version: int | None = None) -> dict:
     table_start = _HEADER.size
     content_size = None
     shard_count = None
-    if version in (VERSION_V3, VERSION_V4):
+    if version in (VERSION_V3, VERSION_V4, VERSION_V5):
         if len(frame) < table_start + _CONTENT_SIZE.size:
             raise FrameFormatError("truncated content-size header")
         (content_size,) = _CONTENT_SIZE.unpack_from(frame, table_start)
         table_start += _CONTENT_SIZE.size
-    if version == VERSION_V4:
+    if version in (VERSION_V4, VERSION_V5):
         if len(frame) < table_start + _SHARD_COUNT.size:
             raise FrameFormatError("truncated shard-count header")
         (shard_count,) = _SHARD_COUNT.unpack_from(frame, table_start)
         table_start += _SHARD_COUNT.size
         if shard_count < 1:
             raise FrameFormatError("shard_count must be >= 1")
-    entry = {VERSION_V1: _ENTRY_V1, VERSION_V4: _ENTRY_V4}.get(version,
-                                                               _ENTRY_V2)
+    entry = {VERSION_V1: _ENTRY_V1, VERSION_V4: _ENTRY_V4,
+             VERSION_V5: _ENTRY_V4}.get(version, _ENTRY_V2)
     table_end = table_start + count * entry.size
     if len(frame) < table_end:
         raise FrameFormatError("truncated block table")
@@ -228,7 +265,7 @@ def frame_info(frame: bytes, max_version: int | None = None) -> dict:
         fields = entry.unpack_from(frame, table_start + i * entry.size)
         usize, cf = fields[0], fields[1]
         crc = fields[2] if version != VERSION_V1 else None
-        shard = fields[3] if version == VERSION_V4 else None
+        shard = fields[3] if version in (VERSION_V4, VERSION_V5) else None
         raw = bool(cf & RAW_FLAG)
         csize = cf & ~RAW_FLAG
         if usize > MAX_BLOCK:
@@ -249,7 +286,15 @@ def frame_info(frame: bytes, max_version: int | None = None) -> dict:
         blocks.append({"usize": usize, "csize": csize, "raw": raw,
                        "offset": off, "crc": crc, "shard": shard})
         off += csize
-    if off != len(frame):
+    content_crc = None
+    if version == VERSION_V5:
+        if off + _CONTENT_CRC.size != len(frame):
+            raise FrameFormatError(
+                f"frame length {len(frame)} != header-implied "
+                f"{off + _CONTENT_CRC.size}"
+            )
+        (content_crc,) = _CONTENT_CRC.unpack_from(frame, off)
+    elif off != len(frame):
         raise FrameFormatError(
             f"frame length {len(frame)} != header-implied {off}"
         )
@@ -260,7 +305,8 @@ def frame_info(frame: bytes, max_version: int | None = None) -> dict:
                 f"content size {content_size} != block-table total {total}"
             )
     return {"version": version, "block_count": count, "blocks": blocks,
-            "content_size": content_size, "shard_count": shard_count}
+            "content_size": content_size, "shard_count": shard_count,
+            "content_crc": content_crc}
 
 
 def check_block(i: int, usize: int, crc: int | None, data: bytes) -> None:
@@ -276,6 +322,18 @@ def check_block(i: int, usize: int, crc: int | None, data: bytes) -> None:
         )
     if crc is not None and block_crc(data) != crc:
         raise FrameFormatError(f"block {i}: checksum mismatch")
+
+
+def check_content_crc(expected: int | None, crc: int) -> None:
+    """Validate the joined output's CRC32 against the v5 trailer.
+
+    `expected` is `frame_info(...)["content_crc"]` (None before version 5 —
+    a no-op then); `crc` is `block_crc` over the full decoded object, or an
+    equivalent in-graph CRC32.  Shared by every full-frame decode path so
+    they reject identically; partial reads never call it.
+    """
+    if expected is not None and crc != expected:
+        raise FrameFormatError("content checksum mismatch")
 
 
 def decode_frame(frame: bytes) -> bytes:
@@ -313,4 +371,5 @@ def decode_frame_serial(frame: bytes, bytewise: bool = False) -> bytes:
                 raise FrameFormatError(f"block {i}: {e}") from e
         check_block(i, b["usize"], b["crc"], data)
         out += data
+    check_content_crc(info["content_crc"], block_crc(bytes(out)))
     return bytes(out)

@@ -270,7 +270,10 @@ def compress_sharded(engine, data: bytes, st) -> bytes:
                 crcs.append(block_crc(chunk))
                 shard_ids.append(sl.shard)
         frame = encode_frame(payloads, usizes, raws, checksums=crcs,
-                             shards=shard_ids, shard_count=S)
+                             shards=shard_ids, shard_count=S,
+                             content_crc=block_crc(data)
+                             if getattr(engine, "content_crc", False)
+                             else None)
     if ob:
         r = obs.registry()
         r.counter("fabric.dispatches",
@@ -323,6 +326,28 @@ def _sharded_decode_compiled(mesh, shard_axes, out_cap, rounds, use_pallas):
     return jax.jit(sm)
 
 
+@functools.lru_cache(maxsize=None)
+def _sharded_plan_decode_compiled(mesh, shard_axes, out_cap, max_lit,
+                                  max_match, rounds, use_pallas):
+    """jit(shard_map(vmap(plan_decode))) cached per static config — the
+    speculative-planning twin of `_sharded_decode_compiled`: every shard
+    parses, validates, and decodes its raw payload rows in one fused graph
+    (no host token parse anywhere).  CRC verification stays on host here
+    (the sharded frame path returns host bytes and runs `check_block`)."""
+    from repro.kernels.ops import plan_decode
+
+    fn = functools.partial(plan_decode, out_cap=out_cap, max_lit=max_lit,
+                           max_match=max_match, rounds=rounds,
+                           use_pallas=use_pallas, compute_crc=False)
+    spec = P(shard_axes)
+    sm = shard_map_compat()(
+        jax.vmap(fn), mesh=mesh,
+        in_specs=(spec,) * 3, out_specs=(spec, spec, spec),
+        check_vma=False,
+    )
+    return jax.jit(sm)
+
+
 def _round_bucket(rounds: int) -> int:
     if rounds <= 0:
         return 0
@@ -343,7 +368,15 @@ def decode_items_sharded(engine, items, st) -> list:
     contiguously across the mesh shards, and executed by
     `shard_map`(vmap(`decode_gather`)) dispatches — the read-side mirror of
     the compress fabric.  Returns the decoded bytes per item.
+
+    Engines with ``plan_on_device=True`` route to the speculative path
+    instead: raw payloads are stacked as-is and
+    `shard_map`(vmap(`plan_decode`)) parses + validates + decodes them in
+    one fused dispatch per step, with per-row status vectors checked at
+    drain (`_decode_items_sharded_spec`).
     """
+    if getattr(engine, "plan_on_device", False):
+        return _decode_items_sharded_spec(engine, items, st)
     ob = engine._obs_on()
     sp = obs.span_factory(ob)
     out: list = [None] * len(items)
@@ -430,6 +463,144 @@ def decode_items_sharded(engine, items, st) -> list:
             res = fn(jnp.asarray(blk), *(jnp.asarray(a) for a in lit),
                      *(jnp.asarray(a) for a in mat),
                      *(jnp.asarray(a) for a in scal))
+        if inflight is not None:
+            drain(*inflight)
+        inflight = ((start, counts, r), res)
+    if inflight is not None:
+        drain(*inflight)
+    if ob:
+        obs.registry().counter(
+            "fabric.dispatches",
+            "sharded compress/decode jit dispatches").inc(st.dispatches)
+        obs.registry().counter(
+            "fabric.fallback_blocks",
+            "sharded-decode blocks executed on host "
+            "(plan overflowed DevicePlanCaps)").inc(st.fallback_blocks)
+    return out
+
+
+def _spec_host_fallback_item(engine, i, payload, usize, crc, st, sp):
+    """Host plan+execute for one sharded item the speculative path cannot
+    keep on device (payload over `blk_cap` or caps overflow) — counted,
+    size-checked against the table, and CRC-verified like the host-planner
+    fallback."""
+    from repro.core.decode_plan import plan_block_fast
+
+    st.fallback_blocks += 1
+    try:
+        with sp("decode.plan", bytes_in=len(payload), executor="device",
+                fallback=True):
+            plan = plan_block_fast(
+                payload, max_out=usize if usize is not None else MAX_BLOCK)
+    except FrameFormatError:
+        raise
+    except LZ4FormatError as e:
+        raise FrameFormatError(f"block {i}: {e}") from e
+    if usize is not None and plan.usize != usize:
+        raise FrameFormatError(
+            f"block {i}: decoded {plan.usize} bytes, table says {usize}")
+    with sp("decode.execute", block=i, fallback=True):
+        data = execute_plan(payload, plan).tobytes()
+    with sp("decode.verify", block=i):
+        check_block(i, plan.usize, crc, data)
+    return data
+
+
+def _decode_items_sharded_spec(engine, items, st) -> list:
+    """`decode_items_sharded` with speculative in-graph planning.
+
+    No host token parse: raw compressed payloads are stacked into the
+    ``(S*r, blk_cap + SPEC_PAD)`` global buffer with their lengths and
+    size caps, and ONE `shard_map`(vmap(`plan_decode`)) dispatch per step
+    parses candidate headers, selects chains, validates, lays out, and
+    decodes every shard's rows.  The host consumes only each row's
+    (SPEC_STATUS,) status vector at drain — parse errors raise the host
+    planner's exact per-block message, size mismatches the ``table says``
+    message, caps overflows take the counted host fallback (error parity
+    with `LZ4DecodeEngine._decode_entries_specplan`).
+    """
+    from repro.core.decode_engine import _spec_err_message
+    from repro.core.decode_plan import MAX_RESOLVE_ROUNDS
+    from repro.kernels import ops as kops
+
+    ob = engine._obs_on()
+    sp = obs.span_factory(ob)
+    out: list = [None] * len(items)
+    jobs = []  # (slot, index, usize, crc, payload, max_out)
+    for slot, (i, payload, usize, crc, raw) in enumerate(items):
+        if raw:
+            with sp("decode.verify", block=i, raw=True):
+                check_block(i, usize if usize is not None else len(payload),
+                            crc, payload)
+            out[slot] = payload
+            continue
+        if len(payload) > engine.caps.blk_cap:
+            out[slot] = _spec_host_fallback_item(
+                engine, i, payload, usize, crc, st, sp)
+            continue
+        jobs.append((slot, i, usize, crc, payload,
+                     usize if usize is not None else MAX_BLOCK))
+
+    if not jobs:
+        return out
+
+    caps = engine.caps
+    S = engine.shards
+    slices = partition_blocks(len(jobs), S)
+    per = [jobs[sl.start: sl.stop] for sl in slices]
+    steps = max(len(p) for p in per)
+    mb = engine.micro_batch
+    fn = _sharded_plan_decode_compiled(
+        engine.mesh, tuple(engine.shard_axes), caps.out_cap, caps.max_lit,
+        caps.max_match, MAX_RESOLVE_ROUNDS, engine.use_pallas)
+
+    def drain(meta, res):
+        start, counts, r = meta
+        rows, status, _crc = res
+        stat = np.asarray(status)
+        for si in range(S):
+            for j in range(counts[si]):
+                slot, idx, usize, crc, payload, _mo = per[si][start + j]
+                row = si * r + j
+                err = int(stat[row, kops.SPEC_ERR])
+                if err:
+                    raise FrameFormatError(
+                        f"block {idx}: {_spec_err_message(err)}")
+                if int(stat[row, kops.SPEC_OVERFLOW]):
+                    out[slot] = _spec_host_fallback_item(
+                        engine, idx, payload, usize, crc, st, sp)
+                    continue
+                out_size = int(stat[row, kops.SPEC_OUT_SIZE])
+                if usize is not None and out_size != usize:
+                    raise FrameFormatError(
+                        f"block {idx}: decoded {out_size} bytes, "
+                        f"table says {usize}")
+                st.device_blocks += 1
+                with sp("decode.drain", bytes=out_size):
+                    data = np.asarray(rows[row][:out_size]).tobytes()
+                st.host_bytes += out_size
+                with sp("decode.verify", block=idx):
+                    check_block(idx, out_size, crc, data)
+                out[slot] = data
+
+    inflight = None
+    for start in range(0, steps, mb):
+        counts = [max(0, min(mb, len(p) - start)) for p in per]
+        r = pad_pow2_count(max(counts), mb)
+        blk = np.zeros((S * r, caps.blk_cap + kops.SPEC_PAD), np.uint8)
+        ns = np.zeros((S * r,), np.int32)
+        mo = np.zeros((S * r,), np.int32)
+        for si in range(S):
+            for j in range(counts[si]):
+                _slot, _idx, _usize, _crc, payload, max_out = per[si][start + j]
+                row = si * r + j
+                blk[row, : len(payload)] = np.frombuffer(payload, np.uint8)
+                ns[row] = len(payload)
+                mo[row] = max_out
+        st.dispatches += 1
+        with sp("decode.plan_device", rows=sum(counts), shards=S,
+                executor="sharded"):
+            res = fn(jnp.asarray(blk), jnp.asarray(ns), jnp.asarray(mo))
         if inflight is not None:
             drain(*inflight)
         inflight = ((start, counts, r), res)

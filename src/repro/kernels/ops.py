@@ -15,6 +15,7 @@ from repro.core.lz4_types import MIN_MATCH
 
 from . import ref
 from .decode_wave import decode_wave_pallas
+from .plan_speculative import plan_spec_pallas
 from .emit_scatter import TILE as EMIT_TILE
 from .emit_scatter import emit_scatter_pallas
 from .fibhash import TILE as HASH_TILE
@@ -264,6 +265,170 @@ def decode_gather(blk_u8, lit_src, lit_dst, lit_len, match_dst, match_off,
                                  rounds=rounds)
         return out.astype(jnp.uint8)
     return ref.decode_gather_ref(blk_i32, lit_blk, ptr, out_size, rounds)
+
+
+# --- speculative in-graph planning -----------------------------------------
+#
+# Buffer padding past the block cap: the speculative parser's 0xFF-run table
+# is read at index n, so the (B,) buffer must be strictly longer than any
+# payload.  128 keeps B lane-aligned for the Pallas path.
+SPEC_PAD = 128
+
+# Rows of the (SPEC_STATUS,) int32 status vector returned per block.
+SPEC_ERR, SPEC_N_LIT, SPEC_N_MATCH, SPEC_OUT_SIZE, SPEC_OVERFLOW = range(5)
+SPEC_STATUS = 5
+
+# Error codes 1..8 are `core.decode_plan._ERR_MESSAGES`; 9 is the serial
+# parser's "truncated block: missing token" (no valid final sequence).
+SPEC_ERR_MISSING_TOKEN = 9
+
+
+def _spec_fields(blk_i32, n, use_pallas: bool):
+    if use_pallas:
+        return plan_spec_pallas(blk_i32, jnp.asarray(n, jnp.int32)[None])
+    return ref.plan_fields_ref(blk_i32, n)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_lit", "max_match", "out_cap", "use_pallas"))
+def plan_speculative(blk_u8, n, max_out, max_lit: int = 8448,
+                     max_match: int = 8448, out_cap: int = 65536,
+                     use_pallas: bool = False):
+    """Parse one block's token stream into `DevicePlan` arrays, in-graph.
+
+    The device-side replacement for `plan_block_fast` + `to_device_plan`:
+    the speculative kernel (plan_speculative.py / ref.plan_fields_ref)
+    decodes a candidate header at every offset and selects the real chain;
+    this XLA half then validates the chain with the host planner's exact
+    error codes, lays out output offsets with a cumsum, and compacts the
+    headers into fixed-shape plan arrays with one scatter per column.
+
+    blk_u8  : (B,) uint8 payload bytes zeroed past `n`; B > blk_cap
+              (pad with `SPEC_PAD`)
+    n       : scalar int32 true payload length (<= B - 1)
+    max_out : scalar int32 decoded-size limit (usize when known, else
+              MAX_BLOCK) — the host planner's `max_out`
+    max_lit/max_match/out_cap : static `DevicePlanCaps` shapes
+
+    Returns ``(lit_src, lit_dst, lit_len, match_dst, match_off, match_len,
+    status)``: the first six are the zero-padded `DevicePlan` columns,
+    bit-identical to ``to_device_plan(plan_block_fast(...))`` for valid
+    streams; ``status`` is (SPEC_STATUS,) int32 indexed by ``SPEC_*`` —
+    ``status[SPEC_ERR]`` carries the host planner's error code (0 = valid),
+    ``status[SPEC_OVERFLOW]`` flags caps overflow (host falls back).  The
+    plan columns are garbage whenever err/overflow is set; callers must
+    check status first.
+
+    All arithmetic is int32.  That is safe even though the host planner
+    sums in int64: per-position fields are < 2^25, and the first invalid
+    sequence is validated against prefix sums over *earlier, valid*
+    sequences only (each bounded by max_out <= 2^16), so every value that
+    can decide accept/reject is exact; wrapped sums can only occur at
+    positions after the first error, which never win the argmax below.
+    """
+    B = blk_u8.shape[0]
+    n = jnp.asarray(n, jnp.int32)
+    max_out = jnp.asarray(max_out, jnp.int32)
+    is_start, lit_start, lit_len, ls_end, off, mlen, flags = _spec_fields(
+        blk_u8.astype(jnp.int32), n, use_pallas)
+    started = is_start > 0
+    trunc_lx = (flags & 1) > 0
+    trunc_mx = (flags & 2) > 0
+    nonfinal = ls_end != n
+
+    # Output layout: cumsum of per-header contributions (zero off-chain),
+    # so prev_total / before_match match the host planner's running total.
+    ll = jnp.where(started, lit_len, 0)
+    ml = jnp.where(started & nonfinal, mlen, 0)
+    cum = jnp.cumsum(ll + ml)
+    prev_total = cum - (ll + ml)
+    before_match = prev_total + ll
+    out_size = cum[-1]
+
+    # Validation, in the host planner's exact priority order: per position
+    # the lowest matching code wins, across positions the first bad header.
+    err = jnp.zeros((B,), jnp.int32)
+    checks = (
+        (trunc_lx, 1),                                  # truncated lit len
+        (ls_end > n, 2),                                # truncated literals
+        (prev_total + lit_len > max_out, 3),            # output exceeds limit
+        (nonfinal & (ls_end + 2 > n), 4),               # truncated offset
+        (nonfinal & (off == 0), 5),                     # zero offset
+        (nonfinal & (off > before_match), 6),           # offset beyond output
+        (nonfinal & trunc_mx, 7),                       # truncated match len
+        (nonfinal & (before_match + mlen > max_out), 8),  # exceeds limit
+    )
+    for cond, code in checks:
+        err = jnp.where(started & cond & (err == 0), code, err)
+    has_err = err > 0
+    err_code = jnp.where(jnp.any(has_err), jnp.take(err, jnp.argmax(has_err)),
+                         0)
+    final_ok = jnp.any(started & (ls_end == n))
+    err_code = jnp.where((err_code == 0) & ~final_ok, SPEC_ERR_MISSING_TOKEN,
+                         err_code)
+
+    # Compaction: one scatter per DevicePlan column.  Ordinal slots are
+    # unique and the scattered values are non-negative for valid streams,
+    # so scatter-max over a zero buffer reproduces `to_device_plan`'s
+    # zero-padded columns exactly.
+    litmask = started & (lit_len > 0)
+    lit_ord = jnp.cumsum(litmask.astype(jnp.int32)) - 1
+    n_lit = jnp.sum(litmask.astype(jnp.int32))
+    lidx = jnp.where(litmask, lit_ord, max_lit)
+    zL = jnp.zeros((max_lit,), jnp.int32)
+    lit_src_o = zL.at[lidx].max(lit_start, mode="drop")
+    lit_dst_o = zL.at[lidx].max(prev_total, mode="drop")
+    lit_len_o = zL.at[lidx].max(lit_len, mode="drop")
+
+    matchmask = started & nonfinal
+    m_ord = jnp.cumsum(matchmask.astype(jnp.int32)) - 1
+    n_match = jnp.sum(matchmask.astype(jnp.int32))
+    midx = jnp.where(matchmask, m_ord, max_match)
+    zM = jnp.zeros((max_match,), jnp.int32)
+    match_dst_o = zM.at[midx].max(before_match, mode="drop")
+    match_off_o = zM.at[midx].max(off, mode="drop")
+    match_len_o = zM.at[midx].max(mlen, mode="drop")
+
+    overflow = (n_lit > max_lit) | (n_match > max_match) | (out_size > out_cap)
+    status = jnp.stack([err_code, n_lit, n_match, out_size,
+                        overflow.astype(jnp.int32)])
+    return (lit_src_o, lit_dst_o, lit_len_o,
+            match_dst_o, match_off_o, match_len_o, status)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("out_cap", "max_lit", "max_match", "rounds",
+                     "use_pallas", "compute_crc"))
+def plan_decode(blk_u8, n, max_out, out_cap: int, max_lit: int,
+                max_match: int, rounds: int, use_pallas: bool = False,
+                compute_crc: bool = True):
+    """Fused plan + execute (+ CRC) for one block, entirely in-graph.
+
+    Chains `plan_speculative` into `decode_gather` (and `crc32_bytes` when
+    `compute_crc`), so a vmapped micro-batch of compressed payloads turns
+    into decoded bytes in ONE dispatch with no host parse.  Rows whose
+    status carries an error or caps overflow decode to zeros (the caller
+    raises or falls back from the status vector); `rounds` should be
+    `MAX_RESOLVE_ROUNDS` — with no host plan there is no `n_waves` to
+    shrink it adaptively.
+
+    Returns ``(out, status, crc)``: (out_cap,) uint8 decoded bytes,
+    the (SPEC_STATUS,) int32 status from `plan_speculative`, and a ()
+    uint32 CRC-32 of the decoded payload (0 when `compute_crc` is off).
+    """
+    (lit_src, lit_dst, lit_len, match_dst, match_off, _match_len,
+     status) = plan_speculative(
+        blk_u8, n, max_out, max_lit=max_lit, max_match=max_match,
+        out_cap=out_cap, use_pallas=use_pallas)
+    ok = (status[SPEC_ERR] == 0) & (status[SPEC_OVERFLOW] == 0)
+    out_size = jnp.where(ok, status[SPEC_OUT_SIZE], 0)
+    out = decode_gather(blk_u8, lit_src, lit_dst, lit_len, match_dst,
+                        match_off, status[SPEC_N_LIT], status[SPEC_N_MATCH],
+                        out_size, out_cap=out_cap, rounds=rounds,
+                        use_pallas=use_pallas)
+    crc = crc32_bytes(out, out_size) if compute_crc else jnp.uint32(0)
+    return out, status, crc
 
 
 @functools.lru_cache(maxsize=1)

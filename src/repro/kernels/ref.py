@@ -174,6 +174,95 @@ def emit_bytes_ref(block, seg, fields, total):
     return jnp.where(k < total, b, 0).astype(jnp.uint8)
 
 
+def plan_fields_ref(block, n, chain_rounds: int = 16):
+    """jnp twin of the speculative parse kernel (plan_speculative.py).
+
+    Decode a CANDIDATE sequence header at EVERY byte offset of a compressed
+    block — token nibbles, 0xFF-run literal/match length extensions, the
+    16-bit back offset, the next-header position — then select the single
+    chain actually reachable from offset 0.  This is the feedback-free
+    formulation of `plan_block_fast`'s prepass (Sitaridi et al., arXiv
+    1606.00519): every field is a pure function of its byte offset, so the
+    serial parse's only residue — *which* offsets are headers — becomes a
+    log-depth reachability pass over the next[] map (scatter-max union of
+    the marked set through its 2^k-hop pointers, the decode-side mirror of
+    `decode_gather_ref`'s pointer doubling).
+
+    The field math reproduces `plan_block_fast` byte for byte, INCLUDING
+    its clamped reads (terminator/offset bytes are fetched at
+    ``min(pos, n-1)``), so candidate fields at non-header offsets — and the
+    error flags of truncated headers — match what the host planner would
+    compute, and the in-graph validator in `kernels.ops.plan_speculative`
+    can reject malformed streams with identical error codes.
+
+    block        : (B,) int32 byte values of the compressed payload,
+                   zeroed past ``n``; B must be STRICTLY greater than any
+                   n (the run table is read at index n)
+    n            : scalar int32 true payload length
+    chain_rounds : static doubling depth; 16 covers any chain in a 64 KB
+                   block (headers are >= 3 bytes apart, so < 2^15 hops)
+
+    Returns seven (B,) int32 arrays:
+      is_start  — 1 where a sequence header actually starts
+      lit_start — offset of the sequence's first literal byte
+      lit_len   — literal run length
+      ls_end    — offset just past the literals (= the offset field)
+      off       — 16-bit back offset (clamped-garbage where truncated)
+      mlen      — match length (garbage for the final sequence)
+      flags     — bit 0: truncated literal-length extension,
+                  bit 1: truncated match-length extension
+    """
+    import jax
+
+    B = block.shape[0]
+    idx = jnp.arange(B, dtype=jnp.int32)
+    n = jnp.asarray(n, jnp.int32)
+    inb = idx < n
+    nm1 = jnp.maximum(n - 1, 0)
+
+    # ffrun[i] = length of the 0xFF run starting at i (0 at/past n): the
+    # first non-0xFF position at or after i, by a reversed cummin, minus i.
+    next_notff = jax.lax.cummin(
+        jnp.where((block == 255) & inb, B, idx), reverse=True)
+    ffrun = next_notff - idx
+
+    # Literal half of the header: nibble, extension run, extended length.
+    lit_nib = block >> 4
+    has_lx = lit_nib == 15
+    r1 = jnp.take(ffrun, jnp.minimum(idx + 1, B - 1))
+    term1 = idx + 1 + r1                    # extension terminator position
+    t1b = jnp.take(block, jnp.minimum(term1, nm1))
+    lit_len = jnp.where(has_lx, r1 * 255 + t1b + 15, lit_nib)
+    lit_start = idx + 1 + jnp.where(has_lx, 1 + r1, 0)
+    ls_end = lit_start + lit_len
+
+    # Match half: offset bytes at ls_end, extension run after them.
+    m_nib = block & 15
+    has_mx = m_nib == 15
+    o0 = jnp.minimum(ls_end, nm1)
+    off = jnp.take(block, o0) | (jnp.take(block, jnp.minimum(o0 + 1, nm1)) << 8)
+    r2 = jnp.take(ffrun, jnp.minimum(ls_end + 2, n))
+    term2 = ls_end + 2 + r2
+    t2b = jnp.take(block, jnp.minimum(term2, nm1))
+    mlen = jnp.where(has_mx, r2 * 255 + t2b + 19, m_nib + 4)
+    nxt = ls_end + 2 + jnp.where(has_mx, r2 + 1, 0)
+
+    flags = (has_lx & (term1 >= n)).astype(jnp.int32) \
+        | ((has_mx & (term2 >= n)).astype(jnp.int32) << 1)
+
+    # Chain select: headers are >= 3 bytes, so next[] strictly advances and
+    # every chain exits through the sentinel fixed point at n.  mark holds
+    # the set reachable from 0 in < 2^k hops; each round unions in the
+    # 2^k-hop successors (one scatter-max) and squares the pointer map.
+    jump = jnp.where(inb, jnp.minimum(nxt, n), idx)
+    mark = (idx == 0).astype(jnp.int32)
+    for _ in range(chain_rounds):
+        mark = mark.at[jump].max(mark, mode="drop")
+        jump = jnp.take(jump, jump)
+    is_start = jnp.where(inb, mark, 0)
+    return is_start, lit_start, lit_len, ls_end, off, mlen, flags
+
+
 def decode_gather_ref(block, lit_blk, ptr, total, rounds: int):
     """Device-side block decode: transitive-source resolve + ONE byte gather.
 

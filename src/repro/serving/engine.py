@@ -155,7 +155,10 @@ def restore_cache(obj, decode_engine=None, to_device: bool = False,
     (`kernels.ops.crc32_bytes`) and only the 4-byte checksum is synced for
     comparison, so zero plaintext bytes cross to the host
     (`DecodeStats.host_bytes` 0); ``verify=False`` skips even that scalar
-    sync and defers integrity to the caller.
+    sync and defers integrity to the caller.  An engine configured with
+    ``plan_on_device=True`` keeps even token-stream PLANNING on device
+    (the speculative planner, kernels/plan_speculative.py) — the restore
+    then has no per-byte host stage at all.
     """
     t0 = time.perf_counter()
     treedef, blobs = obj
@@ -192,10 +195,12 @@ class OffloadedCacheReader:
     blocks are decompressed inside the jit graph (the decode engine's
     device executor) and sliced/reshaped on the accelerator — the
     accelerator-to-accelerator path a production serving fleet wants
-    between offload tiers, with zero plaintext bytes crossing to the host.
-    The default ``verify=True`` keeps that property: each block's CRC32
-    runs in-graph and only the 4-byte checksum is synced for comparison;
-    ``verify=False`` defers integrity to the caller and skips the sync.
+    between offload tiers, with zero plaintext bytes crossing to the host
+    (including planning, when the engine speculates in-graph via
+    ``plan_on_device=True``).  The default ``verify=True`` keeps that
+    property: each block's CRC32 runs in-graph and only the 4-byte
+    checksum is synced for comparison; ``verify=False`` defers integrity
+    to the caller and skips the sync.
 
     >>> rdr = OffloadedCacheReader(blob)
     >>> rdr.read_leaf(3, start=128, count=64)   # 64 elements, ~1 block decoded

@@ -186,6 +186,29 @@ def test_device_engine_caps_fallback(engine):
     assert de.stats.device_blocks == 0
 
 
+@pytest.mark.parametrize("use_pallas", [False, True], ids=["jnp", "pallas"])
+def test_specplan_caps_fallback(engine, use_pallas):
+    # Same caps-overflow semantics under the SPECULATIVE planner: the
+    # in-graph status vector flags the overflow per block, the engine
+    # replans that block on host (counted in fallback_blocks), and the
+    # output stays bit-exact.  device_blocks counts only blocks that
+    # actually finished in-graph: zero here.
+    data = b"speculative fallback parity " * 20000
+    frame = engine.compress(data)
+    de = LZ4DecodeEngine(executor="device", plan_on_device=True,
+                         use_pallas=use_pallas,
+                         caps=DevicePlanCaps(max_lit=2, max_match=2))
+    assert de.decode(frame) == data
+    assert de.stats.fallback_blocks == de.stats.blocks
+    assert de.stats.device_blocks == 0
+    # And with default caps the same engine config takes zero fallbacks.
+    ok = LZ4DecodeEngine(executor="device", plan_on_device=True,
+                         use_pallas=use_pallas)
+    assert ok.decode(frame) == data
+    assert ok.stats.fallback_blocks == 0
+    assert ok.stats.device_blocks == ok.stats.blocks
+
+
 # ---------------------------------------------------------------------------
 # decode_gather: jnp fallback AND Pallas kernel vs the oracles
 # ---------------------------------------------------------------------------

@@ -349,3 +349,106 @@ class TestFrameV4:
         info = frame_info(frame)
         assert info["version"] == 4 and info["shard_count"] == 1
         assert decode_frame(frame) == b""
+
+
+# ---------------------------------------------------------------------------
+# Frame v5 (whole-content checksum trailer) units.
+# ---------------------------------------------------------------------------
+
+class TestFrameV5:
+    def _data(self):
+        return b"whole-object trailer " * 9000  # 3 blocks
+
+    def test_v5_header_trailer_and_shard_column(self):
+        from repro.core import VERSION_V5, block_crc
+
+        data = self._data()
+        frame = LZ4Engine(content_crc=True).compress(data)
+        info = frame_info(frame)
+        assert info["version"] == VERSION_V5
+        assert info["content_crc"] == block_crc(data)
+        # Unsharded v5 records a degenerate shard column: one shard, all 0.
+        assert info["shard_count"] == 1
+        assert all(b["shard"] == 0 for b in info["blocks"])
+
+    def test_pre_v5_frames_have_no_content_crc(self):
+        for eng in (LZ4Engine(), LZ4Engine(shards=2)):
+            assert frame_info(eng.compress(self._data()))["content_crc"] is None
+
+    def test_v5_decodes_with_all_readers(self):
+        from repro.core import LZ4DecodeEngine, decode_frame_serial
+
+        data = self._data()
+        frame = LZ4Engine(content_crc=True).compress(data)
+        assert decode_frame(frame) == data
+        assert decode_frame_serial(frame) == data
+        assert decode_frame_serial(frame, bytewise=True) == data
+        eng = LZ4DecodeEngine(executor="device")
+        assert eng.decode(frame) == data
+        out = eng.decode_to_device(frame)
+        assert bytes(np.asarray(out)) == data
+        assert eng.stats.host_bytes == 0  # trailer check stays in-graph
+
+    def test_v5_sharded(self):
+        from repro.core import VERSION_V5, block_crc, decode_frame_serial
+
+        data = self._data()
+        frame = LZ4Engine(shards=3, content_crc=True).compress(data)
+        info = frame_info(frame)
+        assert info["version"] == VERSION_V5
+        assert info["shard_count"] == 3
+        assert info["content_crc"] == block_crc(data)
+        assert decode_frame(frame) == data
+        assert decode_frame_serial(frame) == data
+
+    def test_v5_trailer_mismatch_rejected_by_full_decoders(self):
+        from repro.core import LZ4DecodeEngine, decode_frame_serial
+
+        data = self._data()
+        frame = LZ4Engine(content_crc=True).compress(data)
+        bad = frame[:-4] + bytes(b ^ 0xFF for b in frame[-4:])
+        eng = LZ4DecodeEngine(executor="device")
+        for decode in (decode_frame, decode_frame_serial, eng.decode,
+                       eng.decode_to_device):
+            with pytest.raises(FrameFormatError,
+                               match="content checksum mismatch"):
+                decode(bad)
+        # verify=False skips the trailer (and per-block) verification.
+        out = eng.decode_to_device(bad, verify=False)
+        assert bytes(np.asarray(out)) == data
+
+    def test_v5_partial_reads_skip_trailer(self):
+        from repro.core import FrameReader
+
+        data = self._data()
+        frame = LZ4Engine(content_crc=True).compress(data)
+        bad = frame[:-4] + bytes(b ^ 0xFF for b in frame[-4:])
+        # Partial reads never materialise the whole object, so the lying
+        # trailer is invisible to them — per-block CRCs still protect them.
+        assert FrameReader(bad).read_range(70000, 100) == data[70000:70100]
+
+    def test_v5_truncated_trailer_rejected(self):
+        frame = LZ4Engine(content_crc=True).compress(self._data())
+        with pytest.raises(FrameFormatError, match="frame length"):
+            frame_info(frame[:-2])
+
+    def test_v4_reader_rejects_v5(self):
+        frame = LZ4Engine(content_crc=True).compress(b"x" * 100)
+        with pytest.raises(FrameFormatError, match="max_version"):
+            frame_info(frame, max_version=4)
+
+    def test_v5_encode_validation(self):
+        with pytest.raises(ValueError, match="version-5"):
+            encode_frame([b"a"], [1], [True], content_crc=1)
+        with pytest.raises(ValueError, match="version-5"):
+            encode_frame([b"a"], [1], [True], checksums=[0],
+                         content_size=False, content_crc=1)
+
+    def test_empty_v5(self):
+        import binascii
+
+        frame = encode_frame([], [], [], checksums=[],
+                             content_crc=binascii.crc32(b""))
+        info = frame_info(frame)
+        assert info["version"] == 5 and info["content_crc"] == 0
+        assert decode_frame(frame) == b""

@@ -288,6 +288,105 @@ def test_v3_reader_rejects_v4(v4_frames):
     assert frame_info(v3, max_version=3)["version"] == 3
 
 
+# ---------------------------------------------------------------------------
+# Frame v5 (whole-content trailer): one more integrity surface to fuzz.
+# ---------------------------------------------------------------------------
+
+# v5 layout: v4 header/table (9 + 8 + 4, 16-byte entries) + 4-byte trailer.
+_V5_TABLE = _V4_TABLE
+_V5_ENTRY = _V4_ENTRY
+
+
+@pytest.fixture(scope="module")
+def v5_frames():
+    rng = _rng()
+    eng = LZ4Engine(micro_batch=4, content_crc=True)
+    corpora = {
+        "multi": b"the quick brown fox " * 9000,                 # 3 blocks
+        "mix": (b"pattern! " * 8000
+                + rng.integers(0, 256, MAX_BLOCK, np.uint8).tobytes()),
+    }
+    out = {}
+    for name, data in corpora.items():
+        frame = eng.compress(data)
+        from repro.core import frame_info
+        assert frame_info(frame)["version"] == 5
+        assert decode_frame(frame) == data
+        out[name] = (data, frame)
+    return out
+
+
+@pytest.mark.parametrize("name", ["multi", "mix"])
+def test_v5_byte_flips_always_detected(v5_frames, name):
+    data, frame = v5_frames[name]
+    # _flip_positions covers header/table + strided payload; force the
+    # 4 trailer bytes in as well — every trailer flip must be rejected.
+    n = len(frame)
+    for pos in sorted(set(_flip_positions(n)) | set(range(n - 4, n))):
+        for mask in (0x01, 0x80, 0xFF):
+            mutant = bytearray(frame)
+            mutant[pos] ^= mask
+            _assert_rejected(bytes(mutant), f"v5 {name}: flip {pos}^{mask:#x}",
+                             original=data)
+
+
+@pytest.mark.parametrize("name", ["multi", "mix"])
+def test_v5_truncations_always_detected(v5_frames, name):
+    _, frame = v5_frames[name]
+    n = len(frame)
+    cuts = set(range(0, _V5_TABLE + 3 * _V5_ENTRY)) | \
+        set(range(0, n, max(1, n // 150))) | {n - 4, n - 3, n - 2, n - 1}
+    for cut in sorted(c for c in cuts if c < n):
+        _assert_rejected(frame[:cut], f"v5 {name}: truncate to {cut}")
+
+
+def test_v5_trailer_catches_block_swap_per_block_crcs_cannot():
+    """The v5 raison d'être: swap two equal-sized blocks' payloads AND
+    their table entries.  Every per-block check still passes (each block
+    matches its own entry) and the shard column stays flat — only the
+    whole-content trailer notices the reordering.  The same mutation on a
+    v3 frame of the same content decodes silently to WRONG bytes."""
+    from repro.core import block_crc, encode_frame, frame_info
+
+    p0, p1 = b"A" * 40, b"B" * 40  # equal-sized raw blocks, different bytes
+    data = p0 + p1
+    kw = dict(checksums=[block_crc(p0), block_crc(p1)])
+
+    def swapped(frame):
+        info = frame_info(frame)
+        b0, b1 = info["blocks"]
+        assert b0["csize"] == b1["csize"]
+        entry = {3: 12, 5: 16}[info["version"]]
+        table = {3: 9 + 8, 5: _V5_TABLE}[info["version"]]
+        m = bytearray(frame)
+        m[table: table + entry], m[table + entry: table + 2 * entry] = (
+            m[table + entry: table + 2 * entry], m[table: table + entry])
+        m[b0["offset"]: b0["offset"] + b0["csize"]], \
+            m[b1["offset"]: b1["offset"] + b1["csize"]] = (
+                m[b1["offset"]: b1["offset"] + b1["csize"]],
+                m[b0["offset"]: b0["offset"] + b0["csize"]])
+        return bytes(m)
+
+    v3 = encode_frame([p0, p1], [40, 40], [True, True], **kw)
+    assert decode_frame(swapped(v3)) == p1 + p0  # silent wrong ORDER on v3
+
+    v5 = encode_frame([p0, p1], [40, 40], [True, True],
+                      content_crc=block_crc(data), **kw)
+    assert decode_frame(v5) == data
+    _assert_rejected(swapped(v5), "v5: equal-size block swap")
+
+
+def test_v4_reader_rejects_v5(v5_frames):
+    """A deployment pinned to the v4 reader must reject v5 frames outright
+    rather than treat the trailer as trailing garbage."""
+    from repro.core import frame_info
+    _, frame = v5_frames["multi"]
+    with pytest.raises(FrameFormatError, match="max_version"):
+        frame_info(frame, max_version=4)
+    with pytest.raises(FrameFormatError, match="max_version"):
+        frame_info(frame, max_version=3)
+
+
 def test_v4_encode_validation():
     """The writer enforces the same invariants the reader checks."""
     from repro.core import block_crc, encode_frame
