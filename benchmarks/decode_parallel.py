@@ -77,7 +77,7 @@ def _process_available() -> bool:
     return "fork" in mp.get_all_start_methods()
 
 
-def run(fast: bool = True) -> dict:
+def run(fast: bool = True, chaos_seed: int | None = None) -> dict:
     n_blocks = 16 if fast else 64
     rounds = 3 if fast else 5
     data = _corpus(n_blocks)
@@ -230,6 +230,31 @@ def run(fast: bool = True) -> dict:
         "speedup": round(full_s / ranged_s, 1),
     }
 
+    # -- optional chaos leg: salvage the same frame after seeded damage -----
+    # One corrupt block, no parity (this corpus frame is v3): salvage must
+    # recover every OTHER block and account the loss — never silently.
+    if chaos_seed is not None:
+        from repro.core.frame import frame_info as _fi
+        from repro.resilience.inject import corrupt_frame_block
+        from repro.resilience.salvage import salvage_frame
+
+        n = _fi(frame)["block_count"]
+        victim = chaos_seed % n
+        bad = corrupt_frame_block(frame, victim, seed=chaos_seed, n=3)
+        t0 = time.perf_counter()
+        rep = salvage_frame(bad, engines["engine_inline"])
+        salvage_s = time.perf_counter() - t0
+        assert rep.lost == [victim], f"chaos: lost {rep.lost} != [{victim}]"
+        assert len(rep.ok) == n - 1, "chaos: an undamaged block was lost"
+        assert len(rep.data) == len(data)
+        out["chaos"] = {
+            "seed": chaos_seed,
+            "damaged_block": victim,
+            "recovered_blocks": len(rep.ok),
+            "lost_blocks": len(rep.lost),
+            "salvage_ms": round(salvage_s * 1000, 1),
+        }
+
     for eng in engines.values():
         eng.close()
     save_json("decode_parallel", out)
@@ -249,5 +274,9 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="also run a seeded-corruption salvage leg "
+                         "(repro.resilience.inject) and record its ledger")
     args = ap.parse_args()
-    print(json.dumps(run(fast=not args.full), indent=1))
+    print(json.dumps(run(fast=not args.full, chaos_seed=args.chaos),
+                     indent=1))

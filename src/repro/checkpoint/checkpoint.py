@@ -19,7 +19,24 @@ Properties:
   * async saves: a snapshot is device_get'd synchronously, then written on a
     background thread so the train loop never blocks on I/O;
   * corrupt checkpoints (bad checksum / truncation) raise CheckpointError and
-    the training driver falls back to the previous checkpoint.
+    the training driver falls back to the previous checkpoint —
+    `restore_with_fallback` automates exactly that walk, and
+    ``restore(..., on_error="salvage")`` recovers every undamaged block of
+    a corrupt checkpoint (zero-filling the rest, with a full accounting);
+  * saves are CRASH-CONSISTENT: data and manifest are written into
+    ``ckpt_<step>.tmp``, fsync'd (files, then the tmp dir, then the parent
+    after the rename), and atomically renamed into place — a writer killed
+    at ANY point leaves either the previous complete checkpoint set or the
+    new complete checkpoint, never a half-written step that `latest_step` /
+    `restore` could mistake for valid (kill-in-the-middle tests pin this,
+    via the named `crash_point` seams below);
+  * the manifest carries content digests of the written artifact itself
+    (``data_size`` / ``data_crc32`` over data.bin, per-leaf ``comp_crc32``
+    over the stored block bytes), so restore detects torn or stale data
+    BEFORE attempting any decode;
+  * transient I/O failures (flaky NFS, injected via `repro.resilience.
+    inject`) are retried with decorrelated-jitter backoff
+    (`repro.resilience.retry`) around file opens and block reads.
 """
 from __future__ import annotations
 
@@ -38,10 +55,41 @@ from repro.core.decode_engine import default_decode_engine
 from repro.core.decoder import LZ4FormatError
 from repro.core.engine import default_engine
 from repro.core.lz4_types import MAX_BLOCK
+from repro.resilience import retry as _retry
+from repro.resilience.errors import FrameError
+from repro.resilience.inject import crash_point, io_point
 
 
-class CheckpointError(RuntimeError):
-    pass
+class CheckpointError(FrameError, RuntimeError):
+    """Corrupt, torn, or unrestorable checkpoint.
+
+    RuntimeError for backwards compatibility; `FrameError` joins it to the
+    unified corruption hierarchy (structured ``cause`` attribute) so one
+    handler covers frame and checkpoint damage."""
+
+
+# Transient-I/O retry schedule for checkpoint file opens and block reads
+# (seeded: the chaos tests pin its behaviour; cap small — this guards
+# against flaky mounts, not outages).
+_IO_RETRY = _retry.RetryPolicy(max_attempts=4, base_s=0.01, cap_s=0.2, seed=0)
+
+
+def _open_retrying(path: str, mode: str):
+    """`open` with transient-failure retries (io_point: checkpoint.open)."""
+    def attempt():
+        io_point("checkpoint.open")
+        return open(path, mode)
+    return _retry.call(attempt, policy=_IO_RETRY)
+
+
+def _fsync_dir(path: str) -> None:
+    """fsync a DIRECTORY so its entry mutations (create/rename) are durable
+    — rename atomicity alone does not survive power loss without this."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _flatten(tree, path=""):
@@ -101,9 +149,15 @@ def save(ckpt_dir: str, step: int, tree, *, compress: bool = True,
         final = os.path.join(ckpt_dir, f"ckpt_{step}")
         tmp = final + ".tmp"
         with obs.span("checkpoint.save", step=step, leaves=len(leaves)):
-            os.makedirs(tmp, exist_ok=True)
+            # A stale .tmp is debris from a previous writer killed mid-save
+            # (the kill-in-the-middle tests produce exactly this); it is
+            # never restorable state, so replace it wholesale.
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
             manifest = {"step": step, "leaves": []}
-            with open(os.path.join(tmp, "data.bin"), "wb") as f:
+            data_crc = 0
+            with _open_retrying(os.path.join(tmp, "data.bin"), "wb") as f:
                 for path, arr in leaves:
                     raw = arr.tobytes()
                     raw_total += len(raw)
@@ -114,20 +168,43 @@ def save(ckpt_dir: str, step: int, tree, *, compress: bool = True,
                         "dtype": str(arr.dtype),
                         "raw_size": len(raw),
                         "crc32": binascii.crc32(raw) & 0xFFFFFFFF,
+                        "comp_crc32": 0,
                         "blocks": [],
                     }
+                    comp_crc = 0
                     for is_comp, data in blocks:
                         entry["blocks"].append(
                             {"offset": f.tell(), "size": len(data), "lz4": bool(is_comp)}
                         )
                         f.write(data)
+                        comp_crc = binascii.crc32(data, comp_crc)
+                        data_crc = binascii.crc32(data, data_crc)
+                    entry["comp_crc32"] = comp_crc & 0xFFFFFFFF
                     manifest["leaves"].append(entry)
+                    # Crash seam: data.bin torn mid-leaf, no manifest yet.
+                    crash_point("checkpoint.data")
                 data_bytes = f.tell()
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                f.flush()
+                os.fsync(f.fileno())
+            # Digests of the artifact itself: restore verifies the bytes it
+            # reads ARE the bytes this writer wrote, before any decode.
+            manifest["data_size"] = data_bytes
+            manifest["data_crc32"] = data_crc & 0xFFFFFFFF
+            # Crash seam: complete data.bin, manifest never written.
+            crash_point("checkpoint.manifest")
+            with _open_retrying(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            _fsync_dir(tmp)
+            # Crash seam: complete .tmp, never renamed into place.
+            crash_point("checkpoint.rename")
             if os.path.exists(final):
                 shutil.rmtree(final)
             os.rename(tmp, final)
+            _fsync_dir(ckpt_dir)
+            # Crash seam: renamed, old checkpoints not yet pruned.
+            crash_point("checkpoint.cleanup")
             _cleanup(ckpt_dir, keep_last)
         if obs.is_enabled():
             obs.counter("checkpoint.saves", "checkpoints written").inc()
@@ -168,8 +245,41 @@ def latest_step(ckpt_dir: str) -> int | None:
     return max(steps) if steps else None
 
 
+def _read_block(f, offset: int, size: int, path: str) -> bytes:
+    """One positioned block read with transient-failure retries
+    (io_point: checkpoint.read)."""
+    def attempt():
+        io_point("checkpoint.read")
+        f.seek(offset)
+        return f.read(size)
+    data = _retry.call(attempt, policy=_IO_RETRY)
+    if len(data) != size:
+        raise CheckpointError(f"truncated block in {path}", cause="truncated")
+    return data
+
+
+def _salvage_leaf(eng, e: dict, payloads, raws) -> tuple[bytes, list[int]]:
+    """Per-block decode of one leaf, zero-filling failures.
+
+    Chunk i of a leaf covers raw bytes [i*MAX_BLOCK, min((i+1)*MAX_BLOCK,
+    raw_size)) — the save-side `_compress_leaf` split — so a failed block
+    zero-fills exactly its span.  Returns (raw bytes, failed block indices).
+    """
+    raw_size = e["raw_size"]
+    parts, failed = [], []
+    for i, (p, r) in enumerate(zip(payloads, raws)):
+        span = min(MAX_BLOCK, raw_size - i * MAX_BLOCK) if raw_size else 0
+        try:
+            parts.append(eng.decode_blocks([p], [r], usizes=[span])[0])
+        except LZ4FormatError:
+            parts.append(b"\x00" * span)
+            failed.append(i)
+    return b"".join(parts)[:raw_size], failed
+
+
 def restore(ckpt_dir: str, step: int, like, shardings=None,
-            decode_engine=None):
+            decode_engine=None, on_error: str = "raise",
+            report: dict | None = None):
     """Rebuild the tree of `like` (a pytree of arrays or ShapeDtypeStructs).
 
     `shardings`: optional matching pytree of NamedShardings for elastic
@@ -178,42 +288,86 @@ def restore(ckpt_dir: str, step: int, like, shardings=None,
     ``executor="process"`` engine for multi-core restores, or
     ``executor="device"`` to run block decompression inside the jit graph
     (plan on host, execute on accelerator) instead of in host NumPy.
+    `on_error`: ``"raise"`` (default) fails the whole restore on the first
+    corrupt block — the strict contract.  ``"salvage"`` decodes every
+    undamaged block, ZERO-FILLS the spans of blocks that fail (so the
+    restored tree keeps its shapes), and records the damage in `report`
+    (``report["zero_filled"]``: leaf path -> failed block indices;
+    ``report["crc_mismatch"]``: leaf paths whose whole-leaf checksum did
+    not verify) plus the ``resilience.*`` obs counters — never silently.
+    A structurally unreadable checkpoint (missing manifest, torn data.bin)
+    still raises; `restore_with_fallback` handles stepping back.
     """
+    if on_error not in ("raise", "salvage"):
+        raise ValueError('on_error must be "raise" or "salvage"')
     t0 = time.perf_counter()
     eng = decode_engine or default_decode_engine()
     final = os.path.join(ckpt_dir, f"ckpt_{step}")
     man_path = os.path.join(final, "manifest.json")
     if not os.path.exists(man_path):
-        raise CheckpointError(f"missing manifest: {man_path}")
-    with open(man_path) as f:
+        raise CheckpointError(f"missing manifest: {man_path}",
+                              cause="structure")
+    with _open_retrying(man_path, "r") as f:
         manifest = json.load(f)
     by_path = {e["path"]: e for e in manifest["leaves"]}
     data_path = os.path.join(final, "data.bin")
+    # Artifact digests (writers since the crash-consistency era): a torn or
+    # stale data.bin is rejected before any block is decoded.
+    if "data_size" in manifest:
+        actual = os.path.getsize(data_path)
+        if actual != manifest["data_size"]:
+            raise CheckpointError(
+                f"data.bin is {actual} bytes, manifest says "
+                f"{manifest['data_size']}", cause="truncated")
+    if report is not None:
+        report.setdefault("zero_filled", {})
+        report.setdefault("crc_mismatch", [])
     out_leaves = {}
     raw_total = 0
-    with obs.span("checkpoint.restore", step=step), open(data_path, "rb") as f:
+    with obs.span("checkpoint.restore", step=step), \
+            _open_retrying(data_path, "rb") as f:
         for path, spec in _flatten(like):
             if path not in by_path:
-                raise CheckpointError(f"leaf {path} not in checkpoint")
+                raise CheckpointError(f"leaf {path} not in checkpoint",
+                                      cause="structure")
             e = by_path[path]
             payloads, raws = [], []
             for b in e["blocks"]:
-                f.seek(b["offset"])
-                data = f.read(b["size"])
-                if len(data) != b["size"]:
-                    raise CheckpointError(f"truncated block in {path}")
-                payloads.append(data)
+                payloads.append(_read_block(f, b["offset"], b["size"], path))
                 raws.append(not b["lz4"])
+            # Stored-bytes digest: distinguishes media damage (the bytes on
+            # disk changed) from a writer bug, before any decode runs.
+            if e.get("comp_crc32") is not None and on_error == "raise":
+                comp = 0
+                for p in payloads:
+                    comp = binascii.crc32(p, comp)
+                if comp & 0xFFFFFFFF != e["comp_crc32"]:
+                    raise CheckpointError(
+                        f"stored bytes of {path} failed their digest",
+                        cause="crc")
             # A leaf's blocks are independent: the decode engine plans and
             # executes them across its worker pool (or, with the device
             # executor, inside vmapped jit dispatches) instead of a loop.
-            try:
-                raw = b"".join(eng.decode_blocks(payloads, raws))
-            except LZ4FormatError as err:
-                raise CheckpointError(f"corrupt block in {path}: {err}") from err
+            failed: list[int] = []
+            if on_error == "salvage":
+                raw, failed = _salvage_leaf(eng, e, payloads, raws)
+                if failed and report is not None:
+                    report["zero_filled"][path] = failed
+            else:
+                try:
+                    raw = b"".join(eng.decode_blocks(payloads, raws))
+                except LZ4FormatError as err:
+                    raise CheckpointError(f"corrupt block in {path}: {err}") from err
             with obs.span("decode.verify", leaf=path):
                 if binascii.crc32(bytes(raw)) & 0xFFFFFFFF != e["crc32"]:
-                    raise CheckpointError(f"checksum mismatch for {path}")
+                    if on_error == "raise":
+                        raise CheckpointError(f"checksum mismatch for {path}",
+                                              cause="crc")
+                    if report is not None:
+                        report["crc_mismatch"].append(path)
+            if failed and obs.is_enabled():
+                obs.counter("resilience.lost_blocks",
+                            "blocks salvage could not recover").inc(len(failed))
             raw_total += len(raw)
             arr = np.frombuffer(bytes(raw), dtype=np.dtype(e["dtype"])).reshape(e["shape"])
             out_leaves[path] = arr
@@ -243,3 +397,47 @@ def restore(ckpt_dir: str, step: int, like, shardings=None,
     else:
         host_tree = jax.tree.map(jax.device_put, host_tree)
     return host_tree, manifest["step"]
+
+
+def restore_with_fallback(ckpt_dir: str, like, shardings=None,
+                          decode_engine=None, max_steps_back: int | None = None):
+    """Restore the NEWEST valid checkpoint, stepping back past corrupt ones.
+
+    The automated form of "corrupt checkpoints raise and the driver falls
+    back": walks the directory's steps newest-first, strict-restoring each
+    until one verifies end to end.  Corrupt or torn steps are skipped (and
+    counted: ``checkpoint.fallback_steps``), never deleted — they stay on
+    disk for post-mortem salvage.  ``max_steps_back`` bounds the walk
+    (None: try every step present).  Raises `CheckpointError` when no step
+    restores.  Returns ``(tree, step)`` like `restore`.
+    """
+    if not os.path.isdir(ckpt_dir):
+        raise CheckpointError(f"no checkpoint directory: {ckpt_dir}",
+                              cause="structure")
+    steps = sorted((int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                    if d.startswith("ckpt_") and not d.endswith(".tmp")),
+                   reverse=True)
+    if max_steps_back is not None:
+        steps = steps[: max_steps_back + 1]
+    if not steps:
+        raise CheckpointError(f"no checkpoints in {ckpt_dir}",
+                              cause="structure")
+    errors: list[str] = []
+    for n, step in enumerate(steps):
+        try:
+            tree, got = restore(ckpt_dir, step, like, shardings=shardings,
+                                decode_engine=decode_engine)
+        except (CheckpointError, OSError, ValueError, KeyError) as e:
+            errors.append(f"step {step}: {e}")
+            if obs.is_enabled():
+                obs.counter("checkpoint.fallback_steps",
+                            "corrupt checkpoint steps skipped by "
+                            "restore_with_fallback").inc()
+            continue
+        if n and obs.is_enabled():
+            obs.counter("checkpoint.fallback_restores",
+                        "restores that landed on an older step").inc()
+        return tree, got
+    raise CheckpointError(
+        "no valid checkpoint found; tried "
+        + "; ".join(errors), cause="structure")

@@ -52,6 +52,7 @@ from .frame import (  # noqa: F401
     VERSION_V3,
     VERSION_V4,
     VERSION_V5,
+    VERSION_V6,
     FrameFormatError,
     block_crc,
     check_content_crc,
@@ -59,6 +60,9 @@ from .frame import (  # noqa: F401
     decode_frame_serial,
     encode_frame,
     frame_info,
+    parity_group_blocks,
+    scan_frame,
+    xor_bytes,
 )
 from .decode_plan import (  # noqa: F401
     BlockPlan,

@@ -301,11 +301,14 @@ class LZ4DecodeEngine:
                  caps: DevicePlanCaps | None = None,
                  adaptive_rounds: bool = True,
                  plan_on_device: bool = False,
+                 on_error: str = "raise",
                  telemetry: bool | None = None,
                  mesh=None,
                  shard_axes: tuple[str, ...] | None = None):
         if executor is not None and executor not in _EXECUTORS:
             raise ValueError(f"executor must be one of {_EXECUTORS}")
+        if on_error not in ("raise", "salvage"):
+            raise ValueError('on_error must be "raise" or "salvage"')
         if plan_on_device and executor != "device":
             raise ValueError("plan_on_device requires executor='device'")
         if workers is not None and workers < 1:
@@ -363,6 +366,15 @@ class LZ4DecodeEngine:
         # inline, two-phase in workers.  Both are bit-identical (tested).
         self.two_phase = (self.executor != "serial") if two_phase is None \
             else two_phase
+        # on_error="salvage": `decode` of a damaged frame falls back to the
+        # salvage pass (repro.resilience.salvage) and returns everything
+        # recoverable with lost blocks zero-filled — NEVER silently: the
+        # fallback is counted (``resilience.*`` obs counters) and
+        # `last_salvage` holds the full SalvageReport (hole map, per-block
+        # errors).  Intact frames are byte-identical either way; "raise"
+        # (the default) keeps strict all-or-nothing decode semantics.
+        self.on_error = on_error
+        self.last_salvage = None
         # Telemetry: None follows the global `repro.obs` gate at call time;
         # True/False pins this instance (never changes decoded bytes).
         self.telemetry = telemetry
@@ -981,12 +993,35 @@ class LZ4DecodeEngine:
 
         return jnp.asarray(np.frombuffer(data, np.uint8))
 
+    def salvage(self, frame: bytes):
+        """Salvage pass over a (possibly damaged) frame: decode every
+        undamaged block on this engine's executor, reconstruct what v6
+        parity can prove byte-identical, and return the `SalvageReport`
+        (recovered data with holes zero-filled + exact loss accounting).
+        See repro/resilience/salvage.py."""
+        from repro.resilience.salvage import salvage_frame
+
+        report = salvage_frame(frame, engine=self)
+        self.last_salvage = report
+        return report
+
     def decode(self, frame: bytes) -> bytes:
         """Frame -> original bytes; bit-identical to `decode_frame_serial`.
 
         Raises FrameFormatError on any malformation, including per-block
-        checksum mismatches on version-2 frames.
+        checksum mismatches on version-2 frames — unless constructed with
+        ``on_error="salvage"``, which turns a failed strict decode into a
+        salvage pass returning everything recoverable (lost blocks
+        zero-filled; the full accounting lands in ``last_salvage``).
         """
+        if self.on_error == "salvage":
+            try:
+                return self._decode_strict(frame)
+            except FrameFormatError:
+                return self.salvage(frame).data
+        return self._decode_strict(frame)
+
+    def _decode_strict(self, frame: bytes) -> bytes:
         info = frame_info(frame)
         blocks = info["blocks"]
         st = DecodeStats(
@@ -1084,10 +1119,21 @@ class FrameReader:
     """
 
     def __init__(self, frame: bytes, engine: LZ4DecodeEngine | None = None,
-                 cache_blocks: int = 8):
+                 cache_blocks: int = 8, on_error: str = "raise"):
+        if on_error not in ("raise", "salvage"):
+            raise ValueError('on_error must be "raise" or "salvage"')
         self._frame = bytes(frame)
         self._engine = engine or default_decode_engine()
-        self._info = frame_info(self._frame)
+        if on_error == "salvage":
+            # Tolerant table parse: a reader over a damaged frame still
+            # exposes every readable entry (reads of blocks whose payloads
+            # are damaged fail per-block; `salvage()` has the recovery).
+            from .frame import scan_frame
+
+            self._info = scan_frame(self._frame)
+        else:
+            self._info = frame_info(self._frame)
+        self.on_error = on_error
         self._blocks = self._info["blocks"]
         # starts[i] = decompressed offset of block i; starts[-1] = total size.
         self._starts = np.concatenate(
@@ -1101,7 +1147,9 @@ class FrameReader:
 
     @property
     def block_count(self) -> int:
-        return self._info["block_count"]
+        # len(blocks), not the header count: a salvage-mode reader over a
+        # truncated table exposes only the entries it could read.
+        return len(self._blocks)
 
     @property
     def usize(self) -> int:
@@ -1205,3 +1253,11 @@ class FrameReader:
     def read(self) -> bytes:
         """Full decode (parallel over all blocks)."""
         return self._engine.decode(self._frame)
+
+    def salvage(self):
+        """Salvage pass over this reader's frame — decode every undamaged
+        block, reconstruct from v6 parity where provable, and return the
+        `SalvageReport` (repro/resilience/salvage.py).  Works regardless
+        of ``on_error`` (a strict reader can still salvage after a read
+        raised)."""
+        return self._engine.salvage(self._frame)

@@ -16,9 +16,15 @@ Two implementations with identical semantics:
 """
 from __future__ import annotations
 
+from repro.resilience.errors import FrameError
 
-class LZ4FormatError(ValueError):
-    pass
+
+class LZ4FormatError(FrameError, ValueError):
+    """Malformed LZ4 block (parse/truncation/size errors).
+
+    ValueError for backwards compatibility; `FrameError` for the unified
+    corruption hierarchy (structured ``block_index``/``cause`` attributes
+    — see repro/resilience/errors.py)."""
 
 
 def decode_block(block: bytes, max_out: int | None = None) -> bytes:

@@ -157,6 +157,7 @@ class LZ4Engine:
                  device_emit: bool = True,
                  drain: str = "sliced",
                  content_crc: bool = False,
+                 parity_group: int | None = None,
                  telemetry: bool | None = None,
                  mesh=None,
                  shard_axes: tuple[str, ...] | None = None,
@@ -227,6 +228,14 @@ class LZ4Engine:
         # failure modes per-block checks cannot see).  Default off: the v3
         # (or v4, sharded) writer stays byte-identical.
         self.content_crc = content_crc
+        # parity_group=N: append one XOR parity block per N data blocks so
+        # salvage (repro.resilience) can reconstruct any SINGLE damaged
+        # block per group byte-identically — the frame becomes version 6,
+        # which always carries the whole-content trailer too (the v6 writer
+        # implies content_crc).  Default off: frame bytes are untouched.
+        if parity_group is not None and parity_group < 1:
+            raise ValueError("parity_group must be >= 1")
+        self.parity_group = parity_group
         # Telemetry: None follows the global `repro.obs` gate (REPRO_OBS /
         # obs.configure) at CALL time; True/False pins this instance.  The
         # resolved flag never changes frame bytes — it only decides whether
@@ -440,8 +449,10 @@ class LZ4Engine:
                 with sp("compress.frame", blocks=len(payloads)):
                     frame = encode_frame(
                         payloads, usizes, raws, checksums=crcs,
-                        content_crc=block_crc(data) if self.content_crc
-                        else None)
+                        content_crc=block_crc(data)
+                        if (self.content_crc or self.parity_group is not None)
+                        else None,
+                        parity_group=self.parity_group)
                 st.bytes_out = len(frame)
                 return frame
         finally:

@@ -269,11 +269,14 @@ def compress_sharded(engine, data: bytes, st) -> bytes:
                 usizes.append(n)
                 crcs.append(block_crc(chunk))
                 shard_ids.append(sl.shard)
+        pg = getattr(engine, "parity_group", None)
         frame = encode_frame(payloads, usizes, raws, checksums=crcs,
                              shards=shard_ids, shard_count=S,
                              content_crc=block_crc(data)
-                             if getattr(engine, "content_crc", False)
-                             else None)
+                             if (getattr(engine, "content_crc", False)
+                                 or pg is not None)
+                             else None,
+                             parity_group=pg)
     if ob:
         r = obs.registry()
         r.counter("fabric.dispatches",

@@ -47,20 +47,10 @@ class StepMonitor:
         return self.straggler_events >= threshold
 
 
-@dataclasses.dataclass
-class RestartPolicy:
-    """Bounded-retry policy with exponential backoff."""
-
-    max_failures: int = 5
-    backoff_s: float = 1.0
-    failures: int = 0
-
-    def record_failure(self) -> float:
-        """Returns backoff seconds to sleep; raises if the budget is spent."""
-        self.failures += 1
-        if self.failures > self.max_failures:
-            raise RuntimeError(f"giving up after {self.failures - 1} failures")
-        return self.backoff_s * (2 ** (self.failures - 1))
+# RestartPolicy was promoted to `repro.resilience.retry` (alongside the
+# jittered RetryPolicy that generalizes it); this import is the deprecation
+# alias keeping the old path working.
+from repro.resilience.retry import RestartPolicy  # noqa: E402,F401
 
 
 class SimulatedFailure(RuntimeError):

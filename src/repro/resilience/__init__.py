@@ -1,0 +1,64 @@
+"""`repro.resilience` — error recovery for the read/write stack.
+
+The detect-only era (per-block CRC32 since frame v2, whole-object trailer
+since v5) made corruption *never silent*; this package makes it
+*survivable*:
+
+    errors    FrameError — unified corruption hierarchy with structured
+              block_index/cause attributes (LZ4FormatError, FrameFormatError
+              and CheckpointError are all subclasses now).
+    retry     RetryPolicy/call — decorrelated-jitter backoff with deadline
+              caps, wrapped around checkpoint and offload I/O; the promoted
+              home of RestartPolicy (old import path still works).
+    salvage   SalvageReport + salvage_frame — decode every undamaged block
+              of a corrupted frame via the seek index (all four executors)
+              and reconstruct single damaged blocks from frame-v6 parity.
+    inject    Seeded fault injection: deterministic bit flips, truncations,
+              torn renames, transient OSErrors, crash points (the `chaos`
+              pytest fixture and benchmark ``--chaos`` flags).
+
+Salvage semantics, parity math, and the failure-mode table:
+docs/resilience.md.
+
+NOTE This ``__init__`` loads submodules lazily (PEP 562): `repro.core`
+imports `repro.resilience.errors` at module-import time, and eagerly
+importing `salvage` here would close an import cycle back through
+`repro.core.decode_engine`.
+"""
+from __future__ import annotations
+
+from .errors import FrameError  # noqa: F401  (dependency-free, safe eager)
+
+__all__ = [
+    "FrameError",
+    "RetryPolicy", "RestartPolicy", "call", "retrying",
+    "SalvageReport", "salvage_frame",
+    "FaultInjector", "InjectedCrash",
+    "errors", "retry", "salvage", "inject",
+]
+
+_LAZY = {
+    "RetryPolicy": ("retry", "RetryPolicy"),
+    "RestartPolicy": ("retry", "RestartPolicy"),
+    "call": ("retry", "call"),
+    "retrying": ("retry", "retrying"),
+    "SalvageReport": ("salvage", "SalvageReport"),
+    "salvage_frame": ("salvage", "salvage_frame"),
+    "FaultInjector": ("inject", "FaultInjector"),
+    "InjectedCrash": ("inject", "InjectedCrash"),
+    "errors": ("errors", None),
+    "retry": ("retry", None),
+    "salvage": ("salvage", None),
+    "inject": ("inject", None),
+}
+
+
+def __getattr__(name: str):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    mod = importlib.import_module(f".{mod_name}", __name__)
+    return mod if attr is None else getattr(mod, attr)

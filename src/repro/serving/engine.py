@@ -24,6 +24,7 @@ from repro.core.decode_engine import FrameReader, default_decode_engine
 from repro.core.engine import default_engine
 from repro.core.frame import block_crc, encode_frame
 from repro.models import lm
+from repro.resilience.errors import FrameError
 
 
 @dataclasses.dataclass
@@ -144,8 +145,17 @@ def _device_view(u8, dtype: np.dtype, shape):
 
 
 def restore_cache(obj, decode_engine=None, to_device: bool = False,
-                  verify: bool = True):
+                  verify: bool = True, on_error: str = "raise",
+                  report: dict | None = None):
     """Full restore: every leaf frame through the parallel decode engine.
+
+    ``on_error="salvage"``: a leaf frame that fails strict decode falls
+    back to the salvage pass (`repro.resilience.salvage`) — every
+    undamaged block is recovered, frame-v6 parity reconstructs what it
+    can prove, and lost spans are zero-filled so the restored tree keeps
+    its shapes.  Damage is recorded in ``report`` (leaf index ->
+    `SalvageReport`) and the ``resilience.*`` obs counters — never
+    silently.  The default ``"raise"`` keeps the strict contract.
 
     ``to_device=True`` routes each frame through the decode engine's
     device executor (`decode_to_device`): blocks are decompressed inside
@@ -160,17 +170,38 @@ def restore_cache(obj, decode_engine=None, to_device: bool = False,
     (the speculative planner, kernels/plan_speculative.py) — the restore
     then has no per-byte host stage at all.
     """
+    if on_error not in ("raise", "salvage"):
+        raise ValueError('on_error must be "raise" or "salvage"')
     t0 = time.perf_counter()
     treedef, blobs = obj
     eng = decode_engine or default_decode_engine()
     leaves = []
     with obs.span("serving.restore", leaves=len(blobs), to_device=to_device):
-        for b in blobs:
+        for i, b in enumerate(blobs):
             if to_device:
-                raw = eng.decode_to_device(b["frame"], verify=verify)
+                try:
+                    raw = eng.decode_to_device(b["frame"], verify=verify)
+                except FrameError:
+                    if on_error != "salvage":
+                        raise
+                    # Host salvage, then upload: correctness first — the
+                    # damaged-frame path is the rare one.
+                    rep = eng.salvage(b["frame"])
+                    if report is not None:
+                        report[i] = rep
+                    raw = jnp.asarray(np.frombuffer(rep.data, np.uint8))
                 leaves.append(_device_view(raw, np.dtype(b["dtype"]), b["shape"]))
             else:
-                raw = eng.decode(b["frame"])
+                try:
+                    raw = eng.decode(b["frame"]) if on_error != "salvage" \
+                        else eng._decode_strict(b["frame"])
+                except FrameError:
+                    if on_error != "salvage":
+                        raise
+                    rep = eng.salvage(b["frame"])
+                    if report is not None:
+                        report[i] = rep
+                    raw = rep.data
                 leaves.append(jnp.asarray(
                     np.frombuffer(raw, np.dtype(b["dtype"])).reshape(b["shape"])))
         tree = jax.tree.unflatten(treedef, leaves)
@@ -208,11 +239,17 @@ class OffloadedCacheReader:
     """
 
     def __init__(self, obj, decode_engine=None, to_device: bool = False,
-                 verify: bool = True):
+                 verify: bool = True, on_error: str = "raise"):
+        if on_error not in ("raise", "salvage"):
+            raise ValueError('on_error must be "raise" or "salvage"')
         self._treedef, self._blobs = obj
         self._engine = decode_engine or default_decode_engine()
         self._to_device = to_device
         self._verify = verify
+        # on_error="salvage": leaf readers are built with the tolerant table
+        # parse (damaged leaves still expose their readable blocks) and
+        # `salvage_leaf` recovers a whole leaf with holes accounted for.
+        self.on_error = on_error
         self._readers: list[FrameReader | None] = [None] * len(self._blobs)
 
     def __len__(self) -> int:
@@ -225,8 +262,16 @@ class OffloadedCacheReader:
     def _reader(self, i: int) -> FrameReader:
         if self._readers[i] is None:
             self._readers[i] = FrameReader(self._blobs[i]["frame"],
-                                           engine=self._engine)
+                                           engine=self._engine,
+                                           on_error=self.on_error)
         return self._readers[i]
+
+    def salvage_leaf(self, i: int):
+        """Salvage pass over leaf i's frame: decode every undamaged block,
+        reconstruct from v6 parity where provable, zero-fill the rest.
+        Returns the `SalvageReport` (repro/resilience/salvage.py) — its
+        ``data`` is the leaf's full-length serialized buffer."""
+        return self._engine.salvage(self._blobs[i]["frame"])
 
     def read_leaf_bytes(self, i: int, start: int = 0,
                         length: int | None = None) -> bytes:
@@ -267,7 +312,8 @@ class OffloadedCacheReader:
                           ).observe(time.perf_counter() - t0)
         return out
 
-    def restore(self):
+    def restore(self, report: dict | None = None):
         """Full pytree restore (equivalent to `restore_cache`)."""
         return restore_cache([self._treedef, self._blobs], self._engine,
-                             to_device=self._to_device, verify=self._verify)
+                             to_device=self._to_device, verify=self._verify,
+                             on_error=self.on_error, report=report)

@@ -1,0 +1,36 @@
+"""Shared fixtures — the seeded fault-injection (`chaos`) harness.
+
+`chaos` arms a process-global `repro.resilience.inject.FaultInjector` for
+one test and guarantees disarm on teardown, so crash points and transient
+I/O faults fire inside the code under test without monkeypatching:
+
+    def test_torn_save(chaos, tmp_path):
+        inj = chaos(seed=3, crash_at="checkpoint.rename")
+        with pytest.raises(InjectedCrash):
+            checkpoint.save(tmp_path, 2, tree)
+        assert checkpoint.latest_step(tmp_path) == 1
+
+The same injector drives the benchmark ``--chaos`` flags and the CI chaos
+matrix, so every layer reproduces failures from one seeded source.
+"""
+import pytest
+
+from repro.resilience.inject import FaultInjector, install
+
+
+@pytest.fixture
+def chaos():
+    """Factory: ``chaos(seed=..., crash_at=..., fail={...}, slow={...})``
+    arms a `FaultInjector` (disarmed automatically at teardown)."""
+    active = []
+
+    def arm(seed: int = 0, **kw) -> FaultInjector:
+        inj = FaultInjector(seed=seed, **kw)
+        cm = install(inj)
+        cm.__enter__()
+        active.append(cm)
+        return inj
+
+    yield arm
+    while active:
+        active.pop().__exit__(None, None, None)

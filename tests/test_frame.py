@@ -452,3 +452,130 @@ class TestFrameV5:
         info = frame_info(frame)
         assert info["version"] == 5 and info["content_crc"] == 0
         assert decode_frame(frame) == b""
+
+
+# ---------------------------------------------------------------------------
+# Frame v6 (XOR parity groups) units.
+# ---------------------------------------------------------------------------
+
+class TestFrameV6:
+    def _data(self):
+        rng = _rng()
+        # Compressible + incompressible mix: parity must cover both LZ4 and
+        # raw-passthrough stored payloads.
+        return (b"parity-protected frame " * 6000
+                + rng.integers(0, 256, 70000, np.uint8).tobytes())
+
+    def test_v6_header_parity_table_and_trailer(self):
+        from repro.core import VERSION_V6, block_crc
+
+        data = self._data()
+        frame = LZ4Engine(parity_group=2).compress(data)
+        info = frame_info(frame)
+        assert info["version"] == VERSION_V6
+        assert info["parity_group"] == 2
+        n_groups = -(-info["block_count"] // 2)
+        assert len(info["parity"]) == n_groups
+        # v6 always carries the whole-content trailer (implied content_crc).
+        assert info["content_crc"] == block_crc(data)
+        for g, p in enumerate(info["parity"]):
+            grp = info["blocks"][g * 2: (g + 1) * 2]
+            assert p["plen"] == max(b["csize"] for b in grp)
+            payload = frame[p["offset"]: p["offset"] + p["plen"]]
+            assert block_crc(payload) == p["crc"]
+
+    def test_parity_is_xor_of_stored_payloads(self):
+        from repro.core import xor_bytes
+
+        data = self._data()
+        frame = LZ4Engine(parity_group=3).compress(data)
+        info = frame_info(frame)
+        for g, p in enumerate(info["parity"]):
+            grp = info["blocks"][g * 3: (g + 1) * 3]
+            stored = [frame[b["offset"]: b["offset"] + b["csize"]]
+                      for b in grp]
+            assert frame[p["offset"]: p["offset"] + p["plen"]] == \
+                xor_bytes(stored, p["plen"])
+
+    def test_v6_decodes_with_all_readers(self):
+        from repro.core import LZ4DecodeEngine, decode_frame_serial
+
+        data = self._data()
+        frame = LZ4Engine(parity_group=4).compress(data)
+        assert decode_frame(frame) == data
+        assert decode_frame_serial(frame) == data
+        assert decode_frame_serial(frame, bytewise=True) == data
+        eng = LZ4DecodeEngine(executor="device")
+        assert eng.decode(frame) == data
+        assert bytes(np.asarray(eng.decode_to_device(frame))) == data
+
+    def test_v6_partial_reads_skip_parity(self):
+        from repro.core import FrameReader
+
+        data = self._data()
+        frame = LZ4Engine(parity_group=2).compress(data)
+        # Damage the PARITY payload only: partial and full reads never
+        # touch it, so both still succeed.
+        info = frame_info(frame)
+        p = info["parity"][0]
+        bad = bytearray(frame)
+        bad[p["offset"]] ^= 0xFF
+        bad = bytes(bad)
+        assert FrameReader(bad).read_range(70000, 100) == data[70000:70100]
+        assert decode_frame(bad) == data
+
+    def test_parity_off_is_byte_identical(self):
+        data = self._data()
+        assert LZ4Engine().compress(data) == \
+            LZ4Engine(parity_group=None).compress(data)
+
+    def test_v6_sharded(self):
+        from repro.core import VERSION_V6, decode_frame_serial
+
+        data = self._data()
+        frame = LZ4Engine(shards=3, parity_group=2).compress(data)
+        info = frame_info(frame)
+        assert info["version"] == VERSION_V6
+        assert info["shard_count"] == 3
+        assert decode_frame(frame) == data
+        assert decode_frame_serial(frame) == data
+
+    def test_v5_reader_rejects_v6(self):
+        frame = LZ4Engine(parity_group=1).compress(b"x" * 100)
+        with pytest.raises(FrameFormatError, match="max_version"):
+            frame_info(frame, max_version=5)
+
+    def test_v6_lying_plen_rejected(self):
+        frame = LZ4Engine(parity_group=2).compress(self._data())
+        info = frame_info(frame)
+        # Corrupt the first parity-table entry's plen field.
+        ptable_off = info["parity"][0]["offset"] - \
+            len(info["parity"]) * 8
+        bad = bytearray(frame)
+        bad[ptable_off] ^= 0x01
+        with pytest.raises(FrameFormatError, match="plen"):
+            frame_info(bytes(bad))
+
+    def test_v6_truncated_parity_rejected(self):
+        frame = LZ4Engine(parity_group=2).compress(self._data())
+        info = frame_info(frame)
+        cut = info["parity"][0]["offset"] - 2
+        with pytest.raises(FrameFormatError, match="truncated parity table"):
+            frame_info(frame[:cut])
+
+    def test_v6_encode_validation(self):
+        with pytest.raises(ValueError, match="content_crc"):
+            encode_frame([b"a"], [1], [True], checksums=[0],
+                         parity_group=2)
+        with pytest.raises(ValueError, match="parity_group"):
+            LZ4Engine(parity_group=0)
+
+    def test_empty_v6(self):
+        import binascii
+
+        frame = encode_frame([], [], [], checksums=[],
+                             content_crc=binascii.crc32(b""),
+                             parity_group=4)
+        info = frame_info(frame)
+        assert info["version"] == 6 and info["parity"] == []
+        assert decode_frame(frame) == b""

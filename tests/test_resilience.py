@@ -1,0 +1,625 @@
+"""Resilience layer: retry policies, seeded fault injection, the FrameError
+hierarchy, tolerant frame scanning, salvage decode across all four executors
+(the seeded chaos matrix), crash-consistent checkpoints, and the salvage
+paths through checkpoint restore and serving cache restore.
+
+The chaos matrix here is the acceptance gate: over a fixed seed matrix and
+every decode executor, injected corruption is NEVER silent, salvage recovers
+every undamaged block, and frame-v6 parity reconstructs any single damaged
+block per group byte-identically.
+"""
+import os
+import pickle
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.checkpoint import checkpoint as ckpt
+from repro.core import (FrameReader, LZ4DecodeEngine, LZ4Engine, block_crc,
+                        decode_frame, frame_info, scan_frame)
+from repro.core.decoder import LZ4FormatError
+from repro.core.frame import FrameFormatError
+from repro.resilience import FrameError, RetryPolicy
+from repro.resilience import retry as retry_mod
+from repro.resilience.inject import (FaultInjector, InjectedCrash,
+                                     corrupt_frame_block, crash_point,
+                                     flip_bits, frame_payload_region,
+                                     install, io_point, truncate)
+from repro.resilience.salvage import SalvageReport, salvage_frame
+from repro.serving.engine import (OffloadedCacheReader, offload_cache,
+                                  restore_cache)
+
+
+def _rng():
+    return np.random.default_rng(20260809)
+
+
+def _payload():
+    """Compressible + incompressible mix -> both LZ4 and raw-stored blocks."""
+    return (b"salvage every undamaged block " * 5000
+            + _rng().integers(0, 256, 70000, np.uint8).tobytes())
+
+
+EXECUTORS = ["serial", "thread", "process", "device"]
+
+
+@pytest.fixture(scope="module")
+def engines():
+    """One decode engine per executor, shared across the chaos matrix
+    (process pools are expensive to spin per-test)."""
+    return {
+        "serial": LZ4DecodeEngine(executor="serial"),
+        "thread": LZ4DecodeEngine(executor="thread", workers=2),
+        "process": LZ4DecodeEngine(executor="process", workers=2),
+        "device": LZ4DecodeEngine(executor="device"),
+    }
+
+
+@pytest.fixture
+def enabled_obs():
+    was = obs.is_enabled()
+    obs.configure(enabled=True)
+    obs.reset()
+    yield obs
+    obs.reset()
+    obs.configure(enabled=was)
+
+
+# ---------------------------------------------------------------------------
+# retry: decorrelated jitter, budgets, deadlines, the RestartPolicy alias
+# ---------------------------------------------------------------------------
+
+class TestRetry:
+    def test_backoffs_seeded_and_capped(self):
+        pol = RetryPolicy(max_attempts=6, base_s=0.01, cap_s=0.5, seed=7)
+        a = list(pol.backoffs())
+        b = list(RetryPolicy(max_attempts=6, base_s=0.01, cap_s=0.5,
+                             seed=7).backoffs())
+        assert a == b and len(a) == 5
+        assert all(0.01 <= d <= 0.5 for d in a)
+        # Decorrelated jitter, not a deterministic ladder.
+        assert a != list(RetryPolicy(max_attempts=6, base_s=0.01, cap_s=0.5,
+                                     seed=8).backoffs())
+
+    def test_call_recovers_from_transient_failures(self):
+        calls, sleeps, retries = [], [], []
+        def flaky():
+            calls.append(1)
+            if len(calls) < 3:
+                raise OSError("transient")
+            return "ok"
+        out = retry_mod.call(
+            flaky, policy=RetryPolicy(max_attempts=4, seed=0),
+            sleep=sleeps.append,
+            on_retry=lambda n, e, d: retries.append((n, str(e))))
+        assert out == "ok" and len(calls) == 3 and len(sleeps) == 2
+        assert retries == [(1, "transient"), (2, "transient")]
+
+    def test_call_raises_after_budget(self):
+        calls, sleeps = [], []
+        def doomed():
+            calls.append(1)
+            raise OSError(f"fail {len(calls)}")
+        with pytest.raises(OSError, match="fail 3"):
+            retry_mod.call(doomed, policy=RetryPolicy(max_attempts=3, seed=0),
+                           sleep=sleeps.append)
+        assert len(calls) == 3 and len(sleeps) == 2
+
+    def test_non_transient_propagates_unretried(self):
+        calls = []
+        def bad():
+            calls.append(1)
+            raise ValueError("corrupt — not transient")
+        with pytest.raises(ValueError):
+            retry_mod.call(bad, policy=RetryPolicy(max_attempts=5, seed=0),
+                           sleep=lambda d: None)
+        assert len(calls) == 1
+
+    def test_deadline_abandons_retries(self):
+        clock = iter([0.0, 100.0]).__next__  # second look: way past deadline
+        calls = []
+        def doomed():
+            calls.append(1)
+            raise OSError("x")
+        with pytest.raises(OSError):
+            retry_mod.call(doomed,
+                           policy=RetryPolicy(max_attempts=10, deadline_s=1.0,
+                                              seed=0),
+                           sleep=lambda d: None, clock=clock)
+        assert len(calls) == 1  # next sleep would cross the deadline
+
+    def test_retrying_decorator(self):
+        state = {"n": 0}
+        @retry_mod.retrying(RetryPolicy(max_attempts=3, seed=1),
+                            sleep=lambda d: None)
+        def sometimes(x):
+            state["n"] += 1
+            if state["n"] == 1:
+                raise OSError("once")
+            return x * 2
+        assert sometimes(21) == 42 and state["n"] == 2
+
+    def test_policy_validation(self):
+        with pytest.raises(ValueError):
+            RetryPolicy(max_attempts=0)
+        with pytest.raises(ValueError):
+            RetryPolicy(base_s=0.5, cap_s=0.1)
+        with pytest.raises(ValueError):
+            RetryPolicy(multiplier=0.5)
+
+    def test_restart_policy_promoted_with_alias(self):
+        # The deprecation alias at the old path IS the promoted class.
+        from repro.distributed.fault import RestartPolicy as OldPath
+        from repro.resilience.retry import RestartPolicy as NewPath
+        assert OldPath is NewPath
+        pol = OldPath(max_failures=2, backoff_s=0.5)
+        assert pol.record_failure() == 0.5
+        assert pol.record_failure() == 1.0
+        with pytest.raises(RuntimeError, match="giving up after 2 failures"):
+            pol.record_failure()
+
+
+# ---------------------------------------------------------------------------
+# fault injection: seeded corruption helpers + armed crash / I/O points
+# ---------------------------------------------------------------------------
+
+class TestInject:
+    def test_flip_bits_deterministic(self):
+        data = bytes(range(256)) * 4
+        a = flip_bits(data, seed=3, n=5)
+        assert a == flip_bits(data, seed=3, n=5)
+        assert a != data and len(a) == len(data)
+        diff = sum(bin(x ^ y).count("1") for x, y in zip(a, data))
+        assert diff == 5
+        assert flip_bits(data, seed=4, n=5) != a
+
+    def test_flip_bits_respects_region(self):
+        data = b"\x00" * 100
+        out = flip_bits(data, seed=0, n=8, start=40, end=50)
+        assert out[:40] == data[:40] and out[50:] == data[50:]
+        assert out[40:50] != data[40:50]
+        with pytest.raises(ValueError, match="bad flip region"):
+            flip_bits(data, seed=0, start=90, end=200)
+
+    def test_truncate_seeded(self):
+        data = b"x" * 1000
+        out = truncate(data, seed=5)
+        assert out == truncate(data, seed=5)
+        assert 1 <= len(out) < len(data)
+        with pytest.raises(ValueError):
+            truncate(b"x", seed=0)
+
+    def test_corrupt_frame_block_targets_payload_only(self):
+        frame = LZ4Engine().compress(_payload())
+        start, end = frame_payload_region(frame, 1)
+        bad = corrupt_frame_block(frame, 1, seed=9)
+        assert bad[:start] == frame[:start] and bad[end:] == frame[end:]
+        assert frame_info(bad)["block_count"] == frame_info(frame)["block_count"]
+        with pytest.raises(FrameFormatError):
+            decode_frame(bad)
+
+    def test_crash_fires_exactly_once(self):
+        inj = FaultInjector(seed=0, crash_at="seam.x")
+        with install(inj):
+            crash_point("seam.other")  # not the target
+            with pytest.raises(InjectedCrash, match="seam.x"):
+                crash_point("seam.x")
+            crash_point("seam.x")  # disarmed after firing
+        assert inj.crashes == ["seam.x"]
+
+    def test_io_faults_then_recovery(self):
+        inj = FaultInjector(seed=0, fail={"op.read": 2})
+        with install(inj):
+            for _ in range(2):
+                with pytest.raises(OSError, match="injected transient"):
+                    io_point("op.read")
+            io_point("op.read")  # budget spent: passes
+        assert inj.io_faults == ["op.read", "op.read"]
+
+    def test_nested_install_rejected(self):
+        with install(FaultInjector()):
+            with pytest.raises(RuntimeError, match="already installed"):
+                install(FaultInjector()).__enter__()
+
+    def test_unarmed_points_are_noops(self):
+        crash_point("anything")
+        io_point("anything")
+
+
+# ---------------------------------------------------------------------------
+# FrameError hierarchy: one handler for frame + checkpoint corruption
+# ---------------------------------------------------------------------------
+
+class TestErrors:
+    def test_hierarchy(self):
+        assert issubclass(FrameFormatError, LZ4FormatError)
+        assert issubclass(LZ4FormatError, FrameError)
+        assert issubclass(LZ4FormatError, ValueError)
+        assert issubclass(ckpt.CheckpointError, FrameError)
+        assert issubclass(ckpt.CheckpointError, RuntimeError)
+
+    def test_attrs_and_pickling(self):
+        e = FrameFormatError("block 3: checksum mismatch",
+                             block_index=3, cause="crc")
+        assert e.block_index == 3 and e.cause == "crc"
+        e2 = pickle.loads(pickle.dumps(e))  # process-pool boundary
+        assert type(e2) is FrameFormatError
+        assert str(e2) == str(e)
+        assert e2.block_index == 3 and e2.cause == "crc"
+
+    def test_real_errors_carry_cause(self):
+        frame = LZ4Engine().compress(_payload())
+        bad = corrupt_frame_block(frame, 0, seed=1)
+        with pytest.raises(FrameError) as ei:
+            decode_frame(bad)
+        assert ei.value.cause in ("crc", "size", "parse")
+        with pytest.raises(FrameError) as ei:
+            frame_info(frame[:10])
+        assert ei.value.cause == "truncated"
+
+
+# ---------------------------------------------------------------------------
+# scan_frame: tolerant structure parse
+# ---------------------------------------------------------------------------
+
+class TestScanFrame:
+    def test_intact_frame_is_complete(self):
+        frame = LZ4Engine(parity_group=2).compress(_payload())
+        info = scan_frame(frame)
+        assert info["complete"] and info["notes"] == []
+        assert all(b["ok"] for b in info["blocks"])
+        assert all(p["ok"] for p in info["parity"])
+
+    def test_truncated_frame_keeps_readable_prefix(self):
+        frame = LZ4Engine().compress(_payload())
+        whole = frame_info(frame)
+        cut = whole["blocks"][2]["offset"] + 10  # mid-payload of block 2
+        info = scan_frame(frame[:cut])
+        assert not info["complete"]
+        assert info["block_count"] == whole["block_count"]  # header claim
+        oks = [b["ok"] for b in info["blocks"]]
+        assert oks[:2] == [True, True] and not any(oks[2:])
+        assert all(b["note"] for b in info["blocks"] if not b["ok"])
+
+    def test_unsalvageable_raises(self):
+        with pytest.raises(FrameFormatError):
+            scan_frame(b"nope")
+        frame = LZ4Engine().compress(b"x" * 100)
+        with pytest.raises(FrameFormatError):
+            scan_frame(b"XXXX" + frame[4:])  # bad magic
+
+
+# ---------------------------------------------------------------------------
+# the seeded chaos matrix: all four executors, zero silent corruption
+# ---------------------------------------------------------------------------
+
+class TestSalvageMatrix:
+    @pytest.mark.parametrize("executor", EXECUTORS)
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_parity_reconstructs_single_damage(self, engines, executor, seed):
+        """v6 parity: any single damaged block per group comes back
+        byte-identical, on every executor, for every seed."""
+        data = _payload()
+        frame = LZ4Engine(parity_group=4).compress(data)
+        n = frame_info(frame)["block_count"]
+        victim = seed % n
+        bad = corrupt_frame_block(frame, victim, seed=seed, n=3)
+        rep = engines[executor].salvage(bad)
+        assert rep.complete and rep.lost == [] and rep.holes == []
+        assert rep.reconstructed == [victim]
+        assert rep.data == data  # byte-identical
+        assert rep.content_crc_ok is True
+        assert "reconstructed from parity" in rep.errors[victim]
+
+    @pytest.mark.parametrize("executor", EXECUTORS)
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_salvage_recovers_every_undamaged_block(self, engines, executor,
+                                                    seed):
+        """No parity: the damaged block is LOST (reported, zero-filled) and
+        every other block is recovered exactly — nothing silent."""
+        data = _payload()
+        frame = LZ4Engine().compress(data)
+        info = frame_info(frame)
+        n = info["block_count"]
+        victim = seed % n
+        bad = corrupt_frame_block(frame, victim, seed=seed, n=3)
+        rep = engines[executor].salvage(bad)
+        assert rep.lost == [victim] and rep.reconstructed == []
+        assert rep.ok == [i for i in range(n) if i != victim]
+        assert victim in rep.errors
+        # The hole covers exactly the victim's decompressed span, zeroed.
+        start = sum(b["usize"] for b in info["blocks"][:victim])
+        span = info["blocks"][victim]["usize"]
+        assert rep.holes == [(start, start + span)]
+        assert rep.data[start: start + span] == b"\x00" * span
+        # Every byte OUTSIDE the hole matches the original exactly.
+        assert rep.data[:start] == data[:start]
+        assert rep.data[start + span:] == data[start + span:]
+        assert len(rep.data) == len(data)
+
+    def test_two_damaged_blocks_in_group_stay_lost(self, engines):
+        data = _payload()
+        frame = LZ4Engine(parity_group=4).compress(data)
+        bad = corrupt_frame_block(frame, 0, seed=0, n=3)
+        bad = corrupt_frame_block(bad, 1, seed=1, n=3)
+        rep = engines["serial"].salvage(bad)
+        assert rep.lost == [0, 1] and rep.reconstructed == []
+        assert "damaged" in rep.errors[0]  # why parity could not save it
+
+    def test_damaged_parity_payload_cannot_reconstruct(self, engines):
+        data = _payload()
+        frame = LZ4Engine(parity_group=4).compress(data)
+        info = frame_info(frame)
+        bad = corrupt_frame_block(frame, 0, seed=0, n=3)
+        p = info["parity"][0]
+        bad = flip_bits(bad, seed=2, n=3, start=p["offset"],
+                        end=p["offset"] + p["plen"])
+        rep = engines["serial"].salvage(bad)
+        assert rep.lost == [0]
+        assert "failed its CRC" in rep.errors[0]
+
+    def test_truncated_frame_salvages_prefix(self, engines):
+        data = _payload()
+        frame = LZ4Engine().compress(data)
+        info = frame_info(frame)
+        cut = info["blocks"][2]["offset"] + 10
+        rep = engines["thread"].salvage(frame[:cut])
+        assert rep.ok == [0, 1]
+        two = sum(b["usize"] for b in info["blocks"][:2])
+        assert rep.data[:two] == data[:two]
+        assert len(rep.data) == len(data)  # zero-extended to content_size
+        assert rep.data[two:] == b"\x00" * (len(data) - two)
+        assert rep.holes == [(two, len(data))]
+
+    def test_counters_pinned(self, engines, enabled_obs):
+        """The CI chaos leg pins these exact counts."""
+        data = _payload()
+        n = frame_info(LZ4Engine().compress(data))["block_count"]
+        bad_v6 = corrupt_frame_block(
+            LZ4Engine(parity_group=4).compress(data), 1, seed=0, n=3)
+        bad_v3 = corrupt_frame_block(LZ4Engine().compress(data), 1,
+                                     seed=0, n=3)
+        engines["serial"].salvage(bad_v6)
+        engines["serial"].salvage(bad_v3)
+        c = obs.snapshot()["metrics"]["counters"]
+        assert c["resilience.salvage_calls"] == 2
+        assert c["resilience.reconstructed_blocks"] == 1   # parity save
+        assert c["resilience.lost_blocks"] == 1            # no-parity loss
+        assert c["resilience.salvaged_blocks"] == 2 * (n - 1)
+
+    def test_decode_engine_on_error_salvage(self):
+        data = _payload()
+        bad = corrupt_frame_block(
+            LZ4Engine(parity_group=4).compress(data), 2, seed=0, n=3)
+        with pytest.raises(FrameFormatError):
+            LZ4DecodeEngine().decode(bad)
+        eng = LZ4DecodeEngine(on_error="salvage")
+        assert eng.decode(bad) == data  # parity made it whole
+        assert eng.last_salvage is not None
+        assert eng.last_salvage.reconstructed == [2]
+        with pytest.raises(ValueError, match="on_error"):
+            LZ4DecodeEngine(on_error="ignore")
+
+    def test_frame_reader_salvage(self):
+        data = _payload()
+        frame = LZ4Engine().compress(data)
+        info = frame_info(frame)
+        bad = corrupt_frame_block(frame, 2, seed=0, n=3)
+        rep = FrameReader(bad).salvage()  # strict readers can still salvage
+        assert isinstance(rep, SalvageReport) and rep.lost == [2]
+        # Tolerant reader on a TRUNCATED frame: reads inside the readable
+        # prefix still work (strict construction would refuse the frame).
+        cut = info["blocks"][2]["offset"] + 10
+        rdr = FrameReader(frame[:cut], on_error="salvage")
+        assert rdr.block_count == info["block_count"]  # table fully readable
+        assert rdr.read_range(100, 50) == data[100:150]
+        with pytest.raises(FrameFormatError):
+            FrameReader(frame[:cut])
+
+
+# ---------------------------------------------------------------------------
+# crash-consistent checkpoints: kill-in-the-middle, digests, retries, salvage
+# ---------------------------------------------------------------------------
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "a": jnp.asarray(rng.normal(0, 1, (64, 64)), jnp.float32),
+        "w": jnp.asarray(np.zeros((40_000,)), jnp.float32),  # compressible
+        "r": jnp.asarray(rng.integers(0, 255, 5000), jnp.uint8),
+    }
+
+
+def _trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestCheckpointCrash:
+    @pytest.mark.parametrize("seam", ["checkpoint.data",
+                                      "checkpoint.manifest",
+                                      "checkpoint.rename"])
+    def test_kill_in_the_middle_never_tears_a_step(self, chaos, tmp_path,
+                                                   seam):
+        """A writer killed at any pre-rename seam leaves the previous step
+        fully restorable and the next save heals the debris."""
+        tree = _tree()
+        ckpt.save(str(tmp_path), 1, tree)
+        inj = chaos(seed=3, crash_at=seam)
+        with pytest.raises(InjectedCrash):
+            ckpt.save(str(tmp_path), 2, _tree(seed=1))
+        assert inj.crashes == [seam]
+        # The torn attempt is invisible to every discovery/restore path.
+        assert ckpt.latest_step(str(tmp_path)) == 1
+        restored, step = ckpt.restore_with_fallback(str(tmp_path), tree)
+        assert step == 1
+        _trees_equal(tree, restored)
+        # Retrying the save (injector disarmed after firing) clears the
+        # stale .tmp and lands step 2.
+        tree2 = _tree(seed=1)
+        ckpt.save(str(tmp_path), 2, tree2)
+        assert not os.path.exists(tmp_path / "ckpt_2.tmp")
+        assert ckpt.latest_step(str(tmp_path)) == 2
+        restored, step = ckpt.restore(str(tmp_path), 2, tree2)
+        _trees_equal(tree2, restored)
+
+    def test_crash_after_rename_keeps_new_step(self, chaos, tmp_path):
+        tree = _tree()
+        ckpt.save(str(tmp_path), 1, tree)
+        chaos(seed=0, crash_at="checkpoint.cleanup")
+        with pytest.raises(InjectedCrash):
+            ckpt.save(str(tmp_path), 2, tree)
+        # Rename already happened: the new step IS the durable state.
+        assert ckpt.latest_step(str(tmp_path)) == 2
+        restored, step = ckpt.restore(str(tmp_path), 2, tree)
+        assert step == 2
+
+    def test_torn_data_bin_rejected_by_size_digest(self, tmp_path):
+        tree = _tree()
+        ckpt.save(str(tmp_path), 1, tree)
+        data = tmp_path / "ckpt_1" / "data.bin"
+        data.write_bytes(data.read_bytes()[:-7])
+        with pytest.raises(ckpt.CheckpointError,
+                           match="data.bin is") as ei:
+            ckpt.restore(str(tmp_path), 1, tree)
+        assert ei.value.cause == "truncated"
+
+    def test_flipped_bytes_rejected_by_stored_digest(self, tmp_path):
+        tree = _tree()
+        ckpt.save(str(tmp_path), 1, tree)
+        data = tmp_path / "ckpt_1" / "data.bin"
+        raw = bytearray(data.read_bytes())
+        raw[len(raw) // 2] ^= 0xFF
+        data.write_bytes(bytes(raw))
+        with pytest.raises(ckpt.CheckpointError,
+                           match="failed their digest"):
+            ckpt.restore(str(tmp_path), 1, tree)
+
+    def test_transient_io_retried(self, chaos, tmp_path):
+        tree = _tree()
+        ckpt.save(str(tmp_path), 1, tree)
+        inj = chaos(seed=0, fail={"checkpoint.open": 1, "checkpoint.read": 2})
+        restored, step = ckpt.restore(str(tmp_path), 1, tree)
+        assert step == 1
+        _trees_equal(tree, restored)
+        assert sorted(inj.io_faults) == ["checkpoint.open", "checkpoint.read",
+                                         "checkpoint.read"]
+
+    def test_restore_salvage_reports_damage(self, tmp_path):
+        tree = _tree()
+        ckpt.save(str(tmp_path), 1, tree)
+        data = tmp_path / "ckpt_1" / "data.bin"
+        raw = data.read_bytes()
+        data.write_bytes(flip_bits(raw, seed=4, n=3))
+        # Strict restore refuses (stored digest) ...
+        with pytest.raises(ckpt.CheckpointError):
+            ckpt.restore(str(tmp_path), 1, tree)
+        # ... salvage restore keeps shapes and ACCOUNTS for the damage.
+        report = {}
+        restored, step = ckpt.restore(str(tmp_path), 1, tree,
+                                      on_error="salvage", report=report)
+        assert step == 1
+        assert report["zero_filled"] or report["crc_mismatch"]  # never silent
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            assert np.asarray(a).shape == np.asarray(b).shape
+
+    def test_fallback_steps_past_corrupt_checkpoint(self, tmp_path,
+                                                    enabled_obs):
+        tree = _tree()
+        ckpt.save(str(tmp_path), 1, tree)
+        ckpt.save(str(tmp_path), 2, _tree(seed=1))
+        data = tmp_path / "ckpt_2" / "data.bin"
+        data.write_bytes(flip_bits(data.read_bytes(), seed=0, n=3))
+        restored, step = ckpt.restore_with_fallback(str(tmp_path), tree)
+        assert step == 1
+        _trees_equal(tree, restored)
+        c = obs.snapshot()["metrics"]["counters"]
+        assert c["checkpoint.fallback_steps"] == 1
+        assert c["checkpoint.fallback_restores"] == 1
+        # Corrupt steps are skipped, never deleted (post-mortem salvage).
+        assert (tmp_path / "ckpt_2").exists()
+
+    def test_fallback_exhausted_raises(self, tmp_path):
+        tree = _tree()
+        ckpt.save(str(tmp_path), 1, tree)
+        data = tmp_path / "ckpt_1" / "data.bin"
+        data.write_bytes(data.read_bytes()[:-5])
+        with pytest.raises(ckpt.CheckpointError,
+                           match="no valid checkpoint found"):
+            ckpt.restore_with_fallback(str(tmp_path), tree)
+
+
+# ---------------------------------------------------------------------------
+# serving: cache restore salvage + reader salvage
+# ---------------------------------------------------------------------------
+
+def _cache():
+    rng = np.random.default_rng(11)
+    return {"k": jnp.asarray(rng.normal(0, 1, (40, 2048)), jnp.float32),
+            "v": jnp.asarray(np.zeros((30, 2048)), jnp.float32)}
+
+
+class TestServingSalvage:
+    def test_restore_cache_salvage_without_parity(self):
+        cache = _cache()
+        blob, _ = offload_cache(cache)
+        blob[1][0]["frame"] = corrupt_frame_block(blob[1][0]["frame"], 0,
+                                                  seed=0, n=3)
+        with pytest.raises(FrameFormatError):
+            restore_cache(blob)
+        report = {}
+        restored = restore_cache(blob, on_error="salvage", report=report)
+        assert set(report) == {0} and report[0].lost == [0]
+        # Undamaged leaf restores exactly; damaged leaf keeps its shape.
+        np.testing.assert_array_equal(np.asarray(cache["v"]),
+                                      np.asarray(restored["v"]))
+        assert np.asarray(restored["k"]).shape == (40, 2048)
+
+    def test_restore_cache_salvage_with_parity(self):
+        """Re-framed with v6 parity, a damaged cache leaf restores
+        byte-identically through the serving path."""
+        cache = _cache()
+        blob, _ = offload_cache(cache)
+        raw = np.asarray(cache["k"]).tobytes()
+        frame = LZ4Engine(parity_group=4).compress(raw)
+        blob[1][0]["frame"] = corrupt_frame_block(frame, 1, seed=0, n=3)
+        report = {}
+        restored = restore_cache(blob, on_error="salvage", report=report)
+        assert report[0].reconstructed == [1] and report[0].complete
+        for k in cache:
+            np.testing.assert_array_equal(np.asarray(cache[k]),
+                                          np.asarray(restored[k]))
+
+    def test_restore_cache_salvage_to_device(self):
+        cache = _cache()
+        blob, _ = offload_cache(cache)
+        raw = np.asarray(cache["k"]).tobytes()
+        frame = LZ4Engine(parity_group=4).compress(raw)
+        blob[1][0]["frame"] = corrupt_frame_block(frame, 0, seed=1, n=3)
+        report = {}
+        restored = restore_cache(blob, to_device=True, on_error="salvage",
+                                 report=report)
+        assert report[0].complete
+        np.testing.assert_array_equal(np.asarray(cache["k"]),
+                                      np.asarray(restored["k"]))
+
+    def test_offloaded_reader_salvage_leaf(self):
+        cache = _cache()
+        blob, _ = offload_cache(cache)
+        blob[1][0]["frame"] = corrupt_frame_block(blob[1][0]["frame"], 1,
+                                                  seed=2, n=3)
+        with pytest.raises(ValueError, match="on_error"):
+            OffloadedCacheReader(blob, on_error="nope")
+        rdr = OffloadedCacheReader(blob, on_error="salvage")
+        rep = rdr.salvage_leaf(0)
+        assert rep.lost == [1]
+        shape, dtype = rdr.leaf_meta(0)
+        arr = np.frombuffer(rep.data, dtype).reshape(shape)
+        assert arr.shape == (40, 2048)
+        # Undamaged leaf reads stay exact through the same reader.
+        np.testing.assert_array_equal(
+            rdr.read_leaf(1, start=64, count=32),
+            np.asarray(cache["v"]).reshape(-1)[64:96])

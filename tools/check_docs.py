@@ -126,7 +126,7 @@ def main() -> int:
         print("FAIL: docs/ contains no markdown pages", file=sys.stderr)
         return 1
     required = {"architecture.md", "frame-format.md", "tuning.md",
-                "observability.md"}
+                "observability.md", "resilience.md"}
     missing = required - {p.name for p in pages}
     errors: list[str] = [f"docs/: required page {m} missing" for m in sorted(missing)]
     for md in pages:
